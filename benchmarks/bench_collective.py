@@ -1,0 +1,39 @@
+"""FedNC-as-collective wire cost: reads the dry-run records and reports
+collective bytes per aggregation mode (the §Perf baseline/optimized
+comparison).  Skips gracefully when the dry-run JSON is absent."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = "EXPERIMENTS/dryrun_results.json"
+PERF = "EXPERIMENTS/perf_results.json"
+
+
+def run() -> None:
+    paths = [p for p in (RESULTS, PERF) if os.path.exists(p)]
+    if not paths:
+        emit("collective_bytes", 0.0, "skipped=no_dryrun_json")
+        return
+    seen = set()
+    for path in paths:
+        with open(path) as f:
+            recs = json.load(f)
+        for r in recs:
+            if r.get("status") != "ok" or r.get("shape") != "train_4k":
+                continue
+            key = (r["arch"], r["mesh"], r.get("agg_mode"))
+            if key in seen:
+                continue
+            seen.add(key)
+            ha = r.get("hlo_analysis", {})
+            emit(f"collective_{r['arch']}_{r['mesh']}_{r.get('agg_mode')}",
+                 0.0,
+                 f"coll_GB={ha.get('collective_bytes_per_device', 0) / 1e9:.1f};"
+                 f"bottleneck={r['roofline']['bottleneck']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Prop. 1: blind-box draws E[G] — FedAvg K·H(K) vs FedNC ~K."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import coupon
+
+from .common import emit
+
+
+def run(trials: int = 200) -> None:
+    for K in (10, 20, 50):
+        t0 = time.perf_counter()
+        sim = float(np.mean(coupon.simulate_fedavg_draws(K, trials)))
+        us = (time.perf_counter() - t0) * 1e6
+        exact = coupon.expected_draws_fedavg(K)
+        asym = coupon.expected_draws_fedavg_asymptotic(K)
+        nc = coupon.expected_draws_fednc(K, s=8)
+        emit(f"coupon_K{K}", us,
+             f"fedavg_sim={sim:.1f};fedavg_KHK={exact:.1f};"
+             f"paper_eq5={asym:.1f};fednc={nc:.2f};"
+             f"speedup={exact / nc:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

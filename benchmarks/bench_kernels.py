@@ -1,0 +1,35 @@
+"""GF coding kernel micro-benchmarks: jnp oracle vs Pallas (interpret).
+
+On this CPU container the Pallas kernel runs in interpret mode (a
+correctness harness, not a speed claim) — the derived column reports
+symbol throughput of the jnp path, which IS the production CPU path,
+plus the paper-relevant encode cost per FL round."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gf import get_field
+from repro.kernels import ops
+
+from .common import emit, time_us
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    for s, K, L in [(8, 10, 1 << 16), (8, 10, 1 << 20), (1, 10, 1 << 20),
+                    (4, 16, 1 << 18)]:
+        f = get_field(s)
+        A = f.random_elements(key, (K, K))
+        P = f.random_elements(jax.random.fold_in(key, 1), (K, L))
+
+        jitted = jax.jit(lambda a, p: ops.gf_matmul(a, p, s=s, impl="jnp"))
+        jitted(A, P).block_until_ready()
+        us = time_us(lambda: jitted(A, P).block_until_ready(), iters=3)
+        mbps = (K * L) / (us / 1e6) / 1e6
+        emit(f"gf_encode_jnp_s{s}_K{K}_L{L}", us,
+             f"{mbps:.0f}Msym/s;round_bytes={K * L}")
+
+
+if __name__ == "__main__":
+    run()

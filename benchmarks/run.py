@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_error_probability  Table I col 2 (p_e vs s, η; Prop. 2 bound)
+  bench_coupon             Prop. 1 (blind-box E[G]: K·H(K) vs ~K)
+  bench_robustness         §III-A.3 (erasure tolerance)
+  bench_kernels            GF coding kernel throughput
+  bench_fl_accuracy        Fig. 3 / Table I col 3 (iid + non-iid)
+  bench_scale              Fig. 4 (N=100→200 analogue)
+  bench_collective         mesh FedNC wire cost (from dry-run records)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduce Monte-Carlo trials / FL rounds")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_collective, bench_coupon,
+                   bench_error_probability, bench_fl_accuracy,
+                   bench_kernels, bench_robustness, bench_scale)
+
+    suites = [
+        ("error_probability",
+         lambda: bench_error_probability.run(trials=40 if args.fast
+                                             else 120)),
+        ("coupon", lambda: bench_coupon.run(trials=80 if args.fast
+                                            else 200)),
+        ("robustness", lambda: bench_robustness.run(
+            trials=10 if args.fast else 30)),
+        ("kernels", bench_kernels.run),
+        ("fl_accuracy", lambda: bench_fl_accuracy.run(
+            rounds=3 if args.fast else 10)),
+        ("scale", lambda: bench_scale.run(rounds=3 if args.fast else 5)),
+        ("collective", bench_collective.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            fn()
+            import jax
+            jax.clear_caches()   # bound the CPU-client compile cache
+        except Exception as e:
+            failures += 1
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

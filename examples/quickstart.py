@@ -1,0 +1,66 @@
+"""FedNC quickstart: one federated round with network coding.
+
+Five clients locally train the paper's CNN, RLNC-encode their parameter
+packets over GF(2^8), ship them through a lossy channel, and the server
+Gaussian-eliminates back the originals — bit-exactly — then aggregates.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fednc
+from repro.core.channel import ErasureChannel
+from repro.core.fednc import FedNCConfig
+from repro.data import make_image_dataset, iid_partition
+from repro.data.synthetic import batches
+from repro.federation import LocalTrainer
+from repro.models.cnn import merge_bn_stats, cnn_loss, init_cnn
+from repro.optim import adam
+
+
+def main() -> None:
+    K = 5
+    ds = make_image_dataset(400, seed=0, size=16)
+    parts = iid_partition(ds.labels, K, seed=1)
+    trainer = LocalTrainer(
+        loss_fn=lambda p, b: cnn_loss(p, b, train=True),
+        optimizer=adam(1e-3), local_epochs=1,
+        state_merge=merge_bn_stats)
+
+    global_params = init_cnn(jax.random.PRNGKey(0), image_size=16)
+
+    # --- local training (paper: local_train(w, D_k)) -------------------
+    client_params = []
+    for k in range(K):
+        it = batches(ds.subset(parts[k]), 32, seed=k, epochs=1)
+        p_k, loss_k = trainer.train(global_params, it)
+        client_params.append(p_k)
+        print(f"client {k}: local loss {loss_k:.4f}")
+
+    # --- FedNC round: encode -> channel -> decode -> aggregate ---------
+    cfg = FedNCConfig(s=8, extra_tuples=2)   # 2 spare coded packets
+    chan = ErasureChannel(p_erase=0.2, seed=3)
+    res = fednc.fednc_round(client_params, [1 / K] * K, global_params,
+                            cfg, jax.random.PRNGKey(7), channel=chan)
+    print(f"\nFedNC: sent {K + cfg.extra_tuples} coded tuples, "
+          f"{res.report.delivered} survived erasure, "
+          f"decoded={res.decoded}")
+
+    # --- the headline property: identical to lossless FedAvg -----------
+    ref = fednc.fedavg_round(client_params, [1 / K] * K, global_params)
+    if res.decoded:
+        diffs = [
+            float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree_util.tree_leaves(res.global_params),
+                            jax.tree_util.tree_leaves(ref.global_params))]
+        print(f"max |FedNC - FedAvg| over all parameters: {max(diffs)} "
+              "(bit-exact coding)")
+    else:
+        print("round skipped (Alg. 1 else-branch); w_t = w_{t-1}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Serving example: batched prefill + greedy decode on any arch config.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-8b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", args.arch, "--batch", str(args.batch),
+           "--new-tokens", str(args.new_tokens)]
+    if not args.full:
+        cmd.append("--reduced")
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Build the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+EXPERIMENTS/dryrun_results.json.
+
+    PYTHONPATH=src python scripts/make_report.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "starcoder2-15b", "recurrentgemma-9b", "llama-3.2-vision-90b",
+    "xlstm-125m", "seamless-m4t-medium", "qwen3-4b", "arctic-480b",
+    "deepseek-v2-236b", "qwen2-72b", "qwen3-8b",
+]
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x: float) -> str:
+    if x >= 1e12:
+        return f"{x / 1e12:.2f}TB"
+    if x >= 1e9:
+        return f"{x / 1e9:.2f}GB"
+    if x >= 1e6:
+        return f"{x / 1e6:.1f}MB"
+    return f"{x / 1e3:.0f}KB"
+
+
+def perf_table(base_path: str = "EXPERIMENTS/dryrun_results.json",
+               perf_path: str = "EXPERIMENTS/perf_results.json") -> None:
+    """§Perf: baseline vs variant roofline terms for the hillclimbed
+    pairs."""
+    import os
+    recs = []
+    for p in (base_path, perf_path):
+        if os.path.exists(p):
+            with open(p) as f:
+                recs += json.load(f)
+    targets = [("arctic-480b", "train_4k"),
+               ("deepseek-v2-236b", "prefill_32k"),
+               ("qwen2-72b", "train_4k")]
+    print("### §Perf variants (hillclimbed pairs)\n")
+    print("| pair | variant | agg | compute | memory | collective |"
+          " bottleneck | coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a, s in targets:
+        for r in recs:
+            if (r.get("arch"), r.get("shape")) != (a, s):
+                continue
+            if r.get("mesh") != "16x16" or r.get("status") != "ok":
+                continue
+            t = r["roofline"]
+            cb = r["hlo_analysis"]["collective_bytes_per_device"]
+            print(f"| {a} × {s} | {r.get('variant', 'baseline')} | "
+                  f"{r.get('agg_mode')} | {fmt_s(t['compute_s'])} | "
+                  f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                  f"{t['bottleneck']} | {fmt_b(cb)} |")
+    print()
+
+
+def main(path: str = "EXPERIMENTS/dryrun_results.json") -> None:
+    with open(path) as f:
+        recs = json.load(f)
+    by_key = {}
+    for r in recs:
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+
+    # ---- dry-run status matrix ----------------------------------------
+    print("### Dry-run status (lower + compile)\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"**mesh {mesh}**\n")
+        print("| arch | " + " | ".join(SHAPE_ORDER) + " |")
+        print("|---|" + "---|" * len(SHAPE_ORDER))
+        for a in ARCH_ORDER:
+            cells = []
+            for s in SHAPE_ORDER:
+                r = by_key.get((a, s, mesh))
+                if r is None:
+                    cells.append("—")
+                elif r["status"] == "ok":
+                    cells.append(f"OK ({r['compile_s']:.0f}s)")
+                else:
+                    cells.append("FAIL")
+            print(f"| {a} | " + " | ".join(cells) + " |")
+        print()
+
+    # ---- roofline table (single-pod) ------------------------------------
+    print("### Roofline terms per (arch × shape), 16x16 = 256 chips\n")
+    print("| arch | shape | compute | memory | collective | bottleneck |"
+          " MODEL_FLOPS | useful/compiled | bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = by_key.get((a, s, "16x16"))
+            if not r or r["status"] != "ok":
+                continue
+            t = r["roofline"]
+            ma = r.get("memory_analysis", {})
+            print(f"| {a} | {s} | {fmt_s(t['compute_s'])} | "
+                  f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                  f"**{t['bottleneck']}** | "
+                  f"{r.get('model_flops', 0):.2e} | "
+                  f"{r.get('useful_flops_ratio', float('nan')):.2f} | "
+                  f"{fmt_b(ma.get('per_device_total_bytes', 0))} |")
+    print()
+
+    # ---- collective mix -------------------------------------------------
+    print("### Collective mix (train_4k, 16x16, baseline agg)\n")
+    print("| arch | AG | AR | RS | A2A | CP | total/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        r = by_key.get((a, "train_4k", "16x16"))
+        if not r or r["status"] != "ok":
+            continue
+        bt = r["hlo_analysis"]["collectives_by_type"]
+        def g(k):
+            return fmt_b(bt.get(k, {}).get("bytes", 0))
+        tot = r["hlo_analysis"]["collective_bytes_per_device"]
+        print(f"| {a} | {g('all-gather')} | {g('all-reduce')} | "
+              f"{g('reduce-scatter')} | {g('all-to-all')} | "
+              f"{g('collective-permute')} | {fmt_b(tot)} |")
+    print()
+    perf_table()
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

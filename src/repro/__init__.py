@@ -1,0 +1,3 @@
+"""repro: FedNC (network-coded federated learning) as a production-grade
+multi-pod JAX framework. See DESIGN.md for the system inventory."""
+__version__ = "0.1.0"

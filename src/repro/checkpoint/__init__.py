@@ -1,0 +1,4 @@
+"""Sharding-aware npz checkpointing for parameter/optimizer pytrees."""
+from .ckpt import load_pytree, restore, save, save_pytree
+
+__all__ = ["load_pytree", "restore", "save", "save_pytree"]

@@ -1,0 +1,78 @@
+"""Checkpointing: pytrees <-> npz + JSON manifest.
+
+Keys are slash-joined tree paths, so checkpoints are stable across
+process restarts and inspectable with plain numpy.  `restore` places
+leaves onto an optional NamedSharding tree (multi-host restore path).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(_key_str(k) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz has no bf16: widen
+            arr = arr.astype(np.float32)   # (lossless; load casts back)
+        flat[name] = arr
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_pytree(path: str, tree: Any, *, metadata: Optional[dict] = None
+                ) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten_with_names(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {
+        "keys": sorted(flat),
+        "metadata": metadata or {},
+    }
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of `like` (names must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        name = "/".join(_key_str(k) for k in p)
+        arr = npz[name]
+        leaves.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    tree = load_pytree(path, like)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"
+
+
+# convenience aliases
+save = save_pytree

@@ -1,0 +1,173 @@
+"""Channel models for FedNC experiments (paper §III-A, §IV-A).
+
+The container has no real network, so the paper's transmission effects
+are simulated explicitly:
+
+* `ErasureChannel`   — each uploaded packet is independently lost with
+                       probability p (robustness claim, §III-A.3).
+* `BlindBoxChannel`  — the server receives packets by random sampling
+                       with replacement and "does not know where the
+                       packet comes from" (paper §IV-A: "blind box
+                       effect"; Prop. 1 coupon-collector setting).
+* `MultiHopChannel`  — η network-interior links each re-code the
+                       stream with fresh random coefficients (Prop. 2's
+                       η; drives the decode-failure probability).
+* `Eavesdropper`     — intercepts each transmitted tuple with
+                       probability p; succeeds iff its intercepted
+                       coding matrix reaches rank K (security claim).
+
+All models operate on `EncodedBatch` (or plain packet matrices for the
+FedAvg baseline) and use numpy RNG host-side — channel simulation is
+control flow, not device math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .gf import get_field, rank as gf_rank
+from .rlnc import EncodedBatch, recode
+
+
+@dataclass
+class ChannelReport:
+    """What happened during one round's transmission."""
+    sent: int
+    delivered: int
+    decodable: bool
+    distinct_sources: int = -1      # FedAvg bookkeeping under blind box
+
+
+class ErasureChannel:
+    """IID packet erasures with probability `p_erase`."""
+
+    def __init__(self, p_erase: float, seed: int = 0):
+        self.p_erase = float(p_erase)
+        self.rng = np.random.default_rng(seed)
+
+    def transmit_encoded(self, batch: EncodedBatch, s: int
+                         ) -> tuple[EncodedBatch, ChannelReport]:
+        keep = self.rng.random(batch.n) >= self.p_erase
+        idx = np.nonzero(keep)[0]
+        out = batch[jnp.asarray(idx, jnp.int32)]
+        dec = (len(idx) >= batch.K and
+               int(gf_rank(get_field(s), out.A)) == batch.K)
+        return out, ChannelReport(batch.n, len(idx), dec)
+
+    def transmit_plain(self, packets: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, np.ndarray, ChannelReport]:
+        """FedAvg baseline: returns (delivered, source_ids, report)."""
+        K = packets.shape[0]
+        keep = self.rng.random(K) >= self.p_erase
+        idx = np.nonzero(keep)[0]
+        rep = ChannelReport(K, len(idx), len(idx) == K,
+                            distinct_sources=len(idx))
+        return packets[jnp.asarray(idx, jnp.int32)], idx, rep
+
+
+class BlindBoxChannel:
+    """Random sampling with replacement: the Prop.-1 setting.
+
+    The server draws `budget` packets; each draw is a uniformly random
+    client (FedAvg) or a uniformly random *fresh coded* packet (FedNC —
+    every coded packet is new, so any K with full rank decode).
+    """
+
+    def __init__(self, budget: int, seed: int = 0):
+        self.budget = int(budget)
+        self.rng = np.random.default_rng(seed)
+
+    def receive_plain(self, packets: jnp.ndarray
+                      ) -> tuple[jnp.ndarray, np.ndarray, ChannelReport]:
+        """FedAvg: server gets `budget` draws w/ replacement; duplicate
+        sources deliver duplicate packets."""
+        K = packets.shape[0]
+        draws = self.rng.integers(0, K, size=self.budget)
+        distinct = len(set(draws.tolist()))
+        rep = ChannelReport(self.budget, self.budget,
+                            decodable=(distinct == K),
+                            distinct_sources=distinct)
+        return packets[jnp.asarray(draws, jnp.int32)], draws, rep
+
+    def receive_encoded(self, make_coded, K: int, s: int
+                        ) -> tuple[EncodedBatch, ChannelReport]:
+        """FedNC: `make_coded(n)` yields n fresh random coded tuples
+        (the network multicasts combinations; the server keeps the
+        first `budget` it hears)."""
+        batch = make_coded(self.budget)
+        dec = (self.budget >= K and
+               int(gf_rank(get_field(s), batch.A)) == K)
+        return batch, ChannelReport(self.budget, self.budget, dec)
+
+
+class MultiHopChannel:
+    """η re-coding links between clients and server (Prop. 2).
+
+    Each link draws a fresh random square recoding matrix over GF(2^s).
+    The compose of η random matrices is singular with probability
+    <= 1 - (1 - 2^-s)^η  (paper eq. 10 with d=1).
+    """
+
+    def __init__(self, eta: int, seed: int = 0):
+        self.eta = int(eta)
+        self.rng = np.random.default_rng(seed)
+
+    def transmit_encoded(self, batch: EncodedBatch, s: int, key=None
+                         ) -> tuple[EncodedBatch, ChannelReport]:
+        """η sequential recodes.  By linearity the hops compose:
+        A' = (R_η···R_1)A, C' = (R_η···R_1)C — so the tiny n×n recode
+        matrices are composed first and the (huge) payload is
+        transformed once.  Bit-identical to hop-by-hop recoding."""
+        import jax
+        field = get_field(s)
+        base = int(self.rng.integers(0, 2**31 - 1))
+        n = batch.n
+        R_comp = jnp.eye(n, dtype=jnp.uint8)
+        for h in range(self.eta):
+            R = field.random_elements(jax.random.PRNGKey(base + h),
+                                      (n, n))
+            R_comp = field.matmul(R, R_comp)
+        out = EncodedBatch(A=field.matmul(R_comp, batch.A),
+                           C=field.matmul(R_comp, batch.C))
+        dec = int(gf_rank(field, out.A)) == batch.K
+        return out, ChannelReport(batch.n, out.n, dec)
+
+
+class Eavesdropper:
+    """Intercepts each tuple independently with probability p_intercept.
+
+    * FedNC: learns nothing unless the intercepted coding matrix has
+      rank K (then it can run the same GE the server runs).
+    * FedAvg baseline: every intercepted packet IS a client's model —
+      leak count = number of interceptions.
+    """
+
+    def __init__(self, p_intercept: float, seed: int = 0):
+        self.p = float(p_intercept)
+        self.rng = np.random.default_rng(seed)
+
+    def attack_encoded(self, batch: EncodedBatch, s: int) -> dict:
+        got = self.rng.random(batch.n) < self.p
+        idx = np.nonzero(got)[0]
+        if len(idx) == 0:
+            return {"intercepted": 0, "rank": 0, "full_leak": False,
+                    "partial_leak_packets": 0}
+        sub = batch[jnp.asarray(idx, jnp.int32)]
+        r = int(gf_rank(get_field(s), sub.A))
+        full = r == batch.K
+        return {
+            "intercepted": int(len(idx)),
+            "rank": r,
+            "full_leak": bool(full),
+            # under RLNC nothing decodes before full rank
+            "partial_leak_packets": batch.K if full else 0,
+        }
+
+    def attack_plain(self, n_packets: int) -> dict:
+        got = int((self.rng.random(n_packets) < self.p).sum())
+        return {"intercepted": got, "rank": got,
+                "full_leak": got == n_packets,
+                "partial_leak_packets": got}

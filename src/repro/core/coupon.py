@@ -1,0 +1,81 @@
+"""Proposition 1: the coupon-collector ('blind box') analysis.
+
+FedAvg under blind-box reception needs E[G] = K·H(K) ≈ K ln K + γK
+random draws to hear from all K clients; FedNC needs ~K draws (any K
+linearly-independent coded packets decode).  This module provides the
+exact math, the asymptotic expansion the paper quotes (eq. 5), and
+Monte-Carlo simulations of both collection processes.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+EULER_GAMMA = 0.5772156649015329
+
+
+def harmonic(K: int) -> float:
+    """H(K) = 1 + 1/2 + ... + 1/K (exact)."""
+    return float(sum(1.0 / i for i in range(1, K + 1)))
+
+
+def expected_draws_fedavg(K: int) -> float:
+    """Exact E[G] = K·H(K) (paper eq. 7)."""
+    return K * harmonic(K)
+
+
+def expected_draws_fedavg_asymptotic(K: int) -> float:
+    """Paper eq. 5: K ln K + γK + 1/2 + O(1/K)."""
+    return K * math.log(K) + EULER_GAMMA * K + 0.5
+
+
+def expected_draws_fednc(K: int, s: int = 8) -> float:
+    """E[#coded packets to reach rank K] with uniform RLNC coefficients.
+
+    Collecting rank i -> i+1 succeeds per draw with probability
+    1 - q^(i-K) (a uniform vector avoids an i-dim subspace of F_q^K),
+    so  E = Σ_{i=0}^{K-1} 1 / (1 - q^{i-K}).  For q=256 this is
+    K + 1/255 + ... ≈ K — the paper's O(K) claim, made exact.
+    """
+    q = float(2**s)
+    return float(sum(1.0 / (1.0 - q ** (i - K)) for i in range(K)))
+
+
+def simulate_fedavg_draws(K: int, trials: int, seed: int = 0) -> np.ndarray:
+    """Monte-Carlo G for the FedAvg blind-box collector."""
+    rng = np.random.default_rng(seed)
+    out = np.empty(trials, dtype=np.int64)
+    for t in range(trials):
+        seen: set[int] = set()
+        g = 0
+        while len(seen) < K:
+            seen.add(int(rng.integers(0, K)))
+            g += 1
+        out[t] = g
+    return out
+
+
+def simulate_fednc_draws(K: int, s: int, trials: int, seed: int = 0
+                         ) -> np.ndarray:
+    """Monte-Carlo #draws for FedNC: draw uniform coding vectors over
+    GF(2^s)^K until the stack reaches rank K (GF rank via repro.core.gf)."""
+    import jax
+    import jax.numpy as jnp
+
+    from .gf import get_field, rank as gf_rank
+
+    field = get_field(s)
+    rng = np.random.default_rng(seed)
+    out = np.empty(trials, dtype=np.int64)
+    for t in range(trials):
+        rows: list[np.ndarray] = []
+        r = 0
+        g = 0
+        while r < K:
+            key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+            rows.append(np.asarray(field.random_elements(key, (K,))))
+            g += 1
+            r = int(gf_rank(field, jnp.asarray(np.stack(rows))))
+        out[t] = g
+    return out

@@ -1,0 +1,157 @@
+"""FedNC round logic — Algorithm 1 of the paper, as a composable module.
+
+One communication round:
+
+    P   <- stack(packetize(w_k) for k in participants)     (paper: P)
+    A   <- random coding matrix over GF(2^s)               (paper: a_i)
+    C   <- A · P                                           (eq. 4)
+    ... tuples (a_i, C_i) traverse the channel ...
+    if A' (received) invertible:
+        P_hat <- GE(A', C');  w <- Σ p_k · unpacketize(P_hat_k)
+    else:
+        w <- w_prev                                        (skip round)
+
+The encode/decode field path is bit-exact (see core.packets), so when
+decoding succeeds the aggregated model equals plain FedAvg on the same
+client set — coding costs zero accuracy, exactly the paper's claim for
+the iid/no-loss setting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import packets as pkt
+from .channel import ChannelReport
+from .gf import get_field
+from .rlnc import EncodedBatch, decode, encode, random_coding_matrix
+
+
+@dataclass(frozen=True)
+class FedNCConfig:
+    s: int = 8                 # field size (symbol bits), paper Table I
+    kernel_impl: str = "auto"  # 'jnp' | 'pallas' | 'auto'
+    extra_tuples: int = 0      # send K + extra coded tuples (erasure headroom)
+    systematic: bool = False   # identity-prefixed coding matrix
+    quantize_bits: int = 0     # 0 = bit-exact float bytes (default);
+    #                            8 = paper-[22] affine int8 packets (4x
+    #                            smaller uploads, lossy)
+    coding_density: float = 1.0  # <1.0 = sparse RLNC coefficients
+
+
+@dataclass
+class RoundResult:
+    global_params: Any
+    decoded: bool
+    report: Optional[ChannelReport]
+    n_aggregated: int
+
+
+def encode_clients(client_params: Sequence[Any], cfg: FedNCConfig, key
+                   ) -> tuple[EncodedBatch, pkt.PacketSpec, Optional[list]]:
+    """Packetize + RLNC-encode K client parameter pytrees.
+
+    Returns (batch, spec, qspecs); qspecs is per-client quantization
+    metadata when cfg.quantize_bits > 0 (it travels uncoded alongside
+    the coding vectors — a few floats per tensor, like a_i itself)."""
+    rows = []
+    spec = None
+    qspecs = None
+    if cfg.quantize_bits:
+        qspecs = []
+        for p in client_params:
+            q, qs = pkt.quantize_pytree(p, bits=cfg.quantize_bits)
+            sym, spec = pkt.pytree_to_packet(q, s=cfg.s)
+            rows.append(sym)
+            qspecs.append(qs)
+    else:
+        for p in client_params:
+            sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
+            rows.append(sym)
+    P = pkt.stack_packets(rows)
+    K = len(rows)
+    n = K + cfg.extra_tuples
+    if cfg.systematic:
+        from .rlnc import systematic_coding_matrix
+        A = systematic_coding_matrix(key, n, K, cfg.s)
+    elif cfg.coding_density < 1.0:
+        from .rlnc import sparse_coding_matrix
+        A = sparse_coding_matrix(key, n, K, cfg.s,
+                                 density=cfg.coding_density)
+    else:
+        A = random_coding_matrix(key, n, K, cfg.s)
+    return encode(P, A, cfg.s, impl=cfg.kernel_impl), spec, qspecs
+
+
+def decode_and_aggregate(batch: EncodedBatch, spec: pkt.PacketSpec,
+                         weights: Sequence[float], prev_global: Any,
+                         cfg: FedNCConfig,
+                         qspecs: Optional[list] = None) -> RoundResult:
+    """Server side of Alg. 1: GE decode, weighted FedAvg, or skip."""
+    K = batch.K
+    if batch.n < K:
+        return RoundResult(prev_global, False, None, 0)
+    if batch.n > K:
+        from .rlnc import select_decodable_rows
+        batch = select_decodable_rows(batch, cfg.s)
+    ok, P_hat = decode(batch, cfg.s)
+    if not bool(ok):
+        return RoundResult(prev_global, False, None, 0)
+    w = np.asarray(weights, np.float32)
+    w = w / w.sum()
+    decoded_trees = [pkt.packet_to_pytree(P_hat[k], spec) for k in range(K)]
+    if qspecs is not None:
+        decoded_trees = [pkt.dequantize_pytree(t, qs)
+                         for t, qs in zip(decoded_trees, qspecs)]
+    agg = jax.tree_util.tree_map(
+        lambda *xs: sum(
+            wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
+        ).astype(xs[0].dtype),
+        *decoded_trees,
+    )
+    return RoundResult(agg, True, None, K)
+
+
+def fednc_round(client_params: Sequence[Any], weights: Sequence[float],
+                prev_global: Any, cfg: FedNCConfig, key,
+                channel=None) -> RoundResult:
+    """Full Alg.-1 round with an optional channel between encode/decode."""
+    batch, spec, qspecs = encode_clients(client_params, cfg, key)
+    report = None
+    if channel is not None:
+        batch, report = channel.transmit_encoded(batch, cfg.s)
+        if not report.decodable:
+            return RoundResult(prev_global, False, report, 0)
+    res = decode_and_aggregate(batch, spec, weights, prev_global, cfg,
+                               qspecs=qspecs)
+    res.report = report
+    return res
+
+
+def fedavg_round(client_params: Sequence[Any], weights: Sequence[float],
+                 prev_global: Any, channel=None) -> RoundResult:
+    """Classic FedAvg baseline (paper §II-A), same channel interface."""
+    K = len(client_params)
+    w = np.asarray(weights, np.float32)
+    if channel is not None:
+        stacked = jnp.stack(
+            [pkt.pytree_to_packet(p, s=8)[0] for p in client_params])
+        delivered, idx, report = channel.transmit_plain(stacked)
+        if len(idx) == 0:
+            return RoundResult(prev_global, False, report, 0)
+        client_params = [client_params[i] for i in idx]
+        w = w[list(idx)]
+    else:
+        report = None
+    w = w / w.sum()
+    agg = jax.tree_util.tree_map(
+        lambda *xs: sum(
+            wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
+        ).astype(xs[0].dtype),
+        *client_params,
+    )
+    return RoundResult(agg, True, report, len(client_params))

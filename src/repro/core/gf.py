@@ -1,0 +1,223 @@
+"""Galois-field GF(2^s) arithmetic for RLNC, vectorized for JAX.
+
+FedNC mixes model "packets" with coefficients drawn from GF(2^s)
+(paper §II-B).  Symbols are s-bit values stored in uint8 (s <= 8).
+Addition is XOR; multiplication uses log/antilog tables built from a
+primitive polynomial of degree s.
+
+The tables are built once per field size with numpy and cached; all
+runtime ops are pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Primitive polynomials (with the x^s term) for GF(2^s), s = 1..8.
+PRIMITIVE_POLY = {
+    1: 0b11,          # x + 1
+    2: 0b111,         # x^2 + x + 1
+    3: 0b1011,        # x^3 + x + 1
+    4: 0b10011,       # x^4 + x + 1
+    5: 0b100101,      # x^5 + x^2 + 1
+    6: 0b1000011,     # x^6 + x + 1
+    7: 0b10000011,    # x^7 + x + 1
+    8: 0b100011101,   # x^8 + x^4 + x^3 + x^2 + 1 (0x11D)
+}
+
+
+def _build_tables(s: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (exp, log) tables for GF(2^s) as uint8/int32 numpy arrays.
+
+    exp has length 2*(q-1) so that exp[log a + log b] never needs a mod.
+    log[0] is set to 0 but is meaningless (multiplication masks zeros).
+    """
+    if s not in PRIMITIVE_POLY:
+        raise ValueError(f"unsupported field size s={s} (need 1..8)")
+    q = 1 << s
+    poly = PRIMITIVE_POLY[s]
+    exp = np.zeros(max(2 * (q - 1), 1), dtype=np.uint8)
+    log = np.zeros(q, dtype=np.int32)
+    x = 1
+    for i in range(q - 1):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & q:
+            x ^= poly
+    for i in range(q - 1, 2 * (q - 1)):
+        exp[i] = exp[i - (q - 1)]
+    if s == 1:  # q-1 == 1; exp table of len 2 with exp[0]=exp[1]=1
+        exp = np.array([1, 1], dtype=np.uint8)
+    return exp, log
+
+
+@dataclass(frozen=True)
+class GF:
+    """A GF(2^s) field with jnp-resident lookup tables."""
+
+    s: int
+    exp: jnp.ndarray = field(repr=False)
+    log: jnp.ndarray = field(repr=False)
+
+    @property
+    def q(self) -> int:
+        return 1 << self.s
+
+    @property
+    def order(self) -> int:  # multiplicative group order
+        return self.q - 1
+
+    # ---- element-wise ops (broadcasting, uint8 in / uint8 out) ----
+
+    def add(self, a, b):
+        return jnp.bitwise_xor(a, b)
+
+    sub = add  # characteristic 2
+
+    def mul(self, a, b):
+        a = jnp.asarray(a, jnp.uint8)
+        b = jnp.asarray(b, jnp.uint8)
+        la = jnp.take(self.log, a.astype(jnp.int32))
+        lb = jnp.take(self.log, b.astype(jnp.int32))
+        prod = jnp.take(self.exp, la + lb)
+        mask = (a != 0) & (b != 0)
+        return jnp.where(mask, prod, jnp.uint8(0))
+
+    def inv(self, a):
+        a = jnp.asarray(a, jnp.uint8)
+        la = jnp.take(self.log, a.astype(jnp.int32))
+        out = jnp.take(self.exp, (self.order - la) % self.order)
+        return jnp.where(a == 0, jnp.uint8(0), out)  # inv(0) := 0 sentinel
+
+    def div(self, a, b):
+        return self.mul(a, self.inv(b))
+
+    def pow(self, a, n: int):
+        a = jnp.asarray(a, jnp.uint8)
+        if n == 0:
+            return jnp.ones_like(a)
+        la = jnp.take(self.log, a.astype(jnp.int32))
+        out = jnp.take(self.exp, (la * n) % self.order)
+        return jnp.where(a == 0, jnp.uint8(0), out)
+
+    # ---- linear algebra ----
+
+    def matmul(self, A, B):
+        """GF matrix product: A (n,k) @ B (k,m) -> (n,m), all uint8.
+
+        Vectorized: one batched table-lookup multiply then an XOR
+        reduction over k.  Memory O(n*k*m); the Pallas kernel in
+        repro.kernels is the blocked production path.
+        """
+        A = jnp.asarray(A, jnp.uint8)
+        B = jnp.asarray(B, jnp.uint8)
+        prod = self.mul(A[:, :, None], B[None, :, :])  # (n,k,m)
+        return xor_reduce(prod, axis=1)
+
+    def matvec(self, A, x):
+        return self.matmul(A, x[:, None])[:, 0]
+
+    def random_elements(self, key, shape):
+        """Uniform random field elements (including 0)."""
+        return jax.random.randint(key, shape, 0, self.q, dtype=jnp.uint8)
+
+    def random_nonzero(self, key, shape):
+        r = jax.random.randint(key, shape, 1, max(self.q, 2), dtype=jnp.uint8)
+        return r
+
+
+def xor_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """XOR-reduction along an axis (jit-safe)."""
+    return jax.lax.reduce(
+        x, np.asarray(0, x.dtype), jax.lax.bitwise_xor, (axis,)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def get_field(s: int) -> GF:
+    exp, log = _build_tables(s)
+    return GF(s=s, exp=jnp.asarray(exp), log=jnp.asarray(log))
+
+
+# ---------------------------------------------------------------------------
+# Gaussian elimination over GF(2^s)
+# ---------------------------------------------------------------------------
+
+def ge_solve(field: GF, A, C):
+    """Solve A @ X = C over GF(2^s) via Gaussian elimination.
+
+    A: (K, K) uint8 coefficient matrix.
+    C: (K, L) uint8 encoded packets.
+    Returns (ok, X): ok is a scalar bool (A invertible), X is (K, L)
+    uint8 (garbage when not ok).  jit-safe; K must be static.
+
+    Partial pivoting means "pick any row with a non-zero entry" — GF has
+    no rounding, so any non-zero pivot is exact.
+    """
+    A = jnp.asarray(A, jnp.uint8)
+    C = jnp.asarray(C, jnp.uint8)
+    K = A.shape[0]
+    M = jnp.concatenate([A, C], axis=1)  # (K, K+L) augmented
+    ok = jnp.bool_(True)
+
+    def body(col, state):
+        M, ok = state
+        colvals = M[:, col]
+        rows = jnp.arange(K)
+        candidates = (colvals != 0) & (rows >= col)
+        piv = jnp.argmax(candidates)          # first valid pivot row
+        ok = ok & candidates[piv]
+        # swap rows `col` and `piv`
+        row_c, row_p = M[col], M[piv]
+        M = M.at[col].set(row_p).at[piv].set(row_c)
+        # normalize pivot row
+        pivval = M[col, col]
+        # guard: if not ok pivval may be 0; inv(0)=0 keeps things finite
+        M = M.at[col].set(field.mul(M[col], field.inv(pivval)))
+        # eliminate this column from every other row
+        factors = M[:, col]
+        factors = factors.at[col].set(0)
+        M = field.add(M, field.mul(factors[:, None], M[col][None, :]))
+        return M, ok
+
+    M, ok = jax.lax.fori_loop(0, K, body, (M, ok), unroll=True)
+    return ok, M[:, K:]
+
+
+def rank(field: GF, A) -> jnp.ndarray:
+    """Rank of A (n, m) over GF(2^s). jit-safe, returns int32 scalar."""
+    A = jnp.asarray(A, jnp.uint8)
+    n, m = A.shape
+
+    def body(col, state):
+        M, r = state
+        rows = jnp.arange(n)
+        candidates = (M[:, col] != 0) & (rows >= r)
+        piv = jnp.argmax(candidates)
+        found = candidates[piv]
+
+        def do_elim(M):
+            row_r, row_p = M[r], M[piv]
+            M2 = M.at[r].set(row_p).at[piv].set(row_r)
+            pivval = M2[r, col]
+            M2 = M2.at[r].set(field.mul(M2[r], field.inv(pivval)))
+            factors = M2[:, col].at[r].set(0)
+            return field.add(M2, field.mul(factors[:, None], M2[r][None, :]))
+
+        M = jax.lax.cond(found, do_elim, lambda M: M, M)
+        return M, r + found.astype(jnp.int32)
+
+    _, r = jax.lax.fori_loop(0, m, body, (A, jnp.int32(0)))
+    return r
+
+
+def invert(field: GF, A):
+    """(ok, A_inv) over GF(2^s)."""
+    K = A.shape[0]
+    I = jnp.eye(K, dtype=jnp.uint8)
+    return ge_solve(field, A, I)

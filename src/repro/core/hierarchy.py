@@ -1,0 +1,96 @@
+"""Hierarchical FedNC (paper §III: "one can utilize the structure of
+hierarchical FL where local clients encode their parameters at trusted
+edge servers before uploading them to the central server").
+
+Topology: K clients partitioned across E edge servers.  Each edge
+collects its clients' plain packets over the trusted local hop, emits
+`n_e` random linear combinations of them — coding vectors live in the
+GLOBAL client index space (support = that edge's clients) — and the
+edges' coded tuples travel the untrusted WAN to the central server,
+optionally re-coding on the way (MultiHopChannel).  The server stacks
+everything it received and decodes all K originals at once when the
+combined coding matrix reaches rank K.
+
+Benefits over flat FedNC, all testable here:
+  * clients never transmit over the open channel at all;
+  * an edge can emit spare combinations (n_e > K_e) so WAN erasures
+    are repaired without re-contacting clients;
+  * eavesdroppers on the WAN face the same rank-K wall.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import packets as pkt
+from .fednc import FedNCConfig, RoundResult, decode_and_aggregate
+from .gf import get_field, rank as gf_rank
+from .rlnc import EncodedBatch, encode as rl_encode, select_decodable_rows
+
+
+@dataclass(frozen=True)
+class EdgeGroup:
+    """Client indices served by one edge server."""
+    client_ids: tuple
+
+
+def partition_edges(K: int, num_edges: int) -> list[EdgeGroup]:
+    ids = np.array_split(np.arange(K), num_edges)
+    return [EdgeGroup(tuple(int(i) for i in grp)) for grp in ids]
+
+
+def edge_encode(P: jnp.ndarray, edge: EdgeGroup, K: int, n_out: int,
+                cfg: FedNCConfig, key) -> EncodedBatch:
+    """One edge's mixing: n_out combinations of ITS clients' packets,
+    with coding vectors embedded in the global K-client index space."""
+    field_ = get_field(cfg.s)
+    sub = P[jnp.asarray(edge.client_ids, jnp.int32)]      # (K_e, L)
+    A_local = field_.random_elements(key, (n_out, len(edge.client_ids)))
+    C = rl_encode(sub, A_local, cfg.s, impl=cfg.kernel_impl).C
+    A_global = jnp.zeros((n_out, K), jnp.uint8)
+    A_global = A_global.at[:, jnp.asarray(edge.client_ids)].set(A_local)
+    return EncodedBatch(A=A_global, C=C)
+
+
+def hierarchical_fednc_round(client_params: Sequence[Any],
+                             weights: Sequence[float],
+                             prev_global: Any,
+                             cfg: FedNCConfig, key, *,
+                             num_edges: int = 2,
+                             spare_per_edge: int = 0,
+                             wan_channel=None) -> RoundResult:
+    """Full hierarchical round: client -> edge encode -> WAN -> server."""
+    K = len(client_params)
+    rows, spec = [], None
+    for p in client_params:
+        sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
+        rows.append(sym)
+    P = pkt.stack_packets(rows)
+
+    edges = partition_edges(K, num_edges)
+    batches = []
+    for e, edge in enumerate(edges):
+        n_out = len(edge.client_ids) + spare_per_edge
+        batches.append(edge_encode(P, edge, K, n_out, cfg,
+                                   jax.random.fold_in(key, e)))
+    combined = batches[0]
+    for b in batches[1:]:
+        combined = combined.concat(b)
+
+    report = None
+    if wan_channel is not None:
+        combined, report = wan_channel.transmit_encoded(combined, cfg.s)
+        if not report.decodable:
+            return RoundResult(prev_global, False, report, 0)
+
+    if int(gf_rank(get_field(cfg.s), combined.A)) < K:
+        return RoundResult(prev_global, False, report, 0)
+    picked = (select_decodable_rows(combined, cfg.s)
+              if combined.n != K else combined)
+    res = decode_and_aggregate(picked, spec, weights, prev_global, cfg)
+    res.report = report
+    return res

@@ -1,0 +1,180 @@
+"""Packetization: model-parameter pytrees <-> GF(2^s) symbol packets.
+
+The paper treats "the local parameters uploaded by each client as a
+packet" (§III).  It leaves the real-number -> finite-field mapping out
+of scope; we implement it two ways:
+
+* **bit-exact** (default): float32 (or any dtype) leaves are bitcast to
+  raw bytes; bytes are split into s-bit symbols.  RLNC over GF(2^s) is
+  then *lossless* — decode returns the packet bit-for-bit.
+* **quantized** (the paper's cited alternative [22]): per-tensor affine
+  int8 quantization before byte-packing (lossy, 4x smaller packets).
+
+A packet is a 1-D uint8 array of symbols (each in [0, 2^s)) plus a
+`PacketSpec` describing how to reassemble the pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PacketSpec:
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    s: int
+    n_bytes: int          # total byte length before symbol split
+    quantized: bool = False
+
+    @property
+    def symbols_per_byte(self) -> int:
+        return 8 // self.s if self.s < 8 else 1
+
+    @property
+    def n_symbols(self) -> int:
+        return self.n_bytes * self.symbols_per_byte
+
+
+# ---------------------------------------------------------------------------
+# bytes <-> symbols
+# ---------------------------------------------------------------------------
+
+def bytes_to_symbols(b: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Split a uint8 byte stream into s-bit symbols (s in {1,2,4,8}).
+
+    Little-endian within the byte: symbol j of byte holds bits
+    [j*s, (j+1)*s).  Output dtype uint8, each value < 2^s.
+    """
+    b = jnp.asarray(b, jnp.uint8)
+    if s == 8:
+        return b
+    if s not in (1, 2, 4):
+        raise ValueError("byte-aligned symbol sizes are 1, 2, 4, 8")
+    per = 8 // s
+    shifts = jnp.arange(per, dtype=jnp.uint8) * s          # (per,)
+    mask = jnp.uint8((1 << s) - 1)
+    sym = (b[:, None] >> shifts[None, :]) & mask           # (n, per)
+    return sym.reshape(-1)
+
+
+def symbols_to_bytes(sym: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Inverse of :func:`bytes_to_symbols`."""
+    sym = jnp.asarray(sym, jnp.uint8)
+    if s == 8:
+        return sym
+    per = 8 // s
+    sym = sym.reshape(-1, per)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * s
+    return jax.lax.reduce(
+        (sym << shifts[None, :]).astype(jnp.uint8),
+        np.uint8(0), jax.lax.bitwise_or, (1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> packet
+# ---------------------------------------------------------------------------
+
+def _leaf_to_bytes(x: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.asarray(x)
+    if x.dtype == jnp.uint8:
+        return x.reshape(-1)
+    flat = x.reshape(-1)
+    as_bytes = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+    return as_bytes.reshape(-1)
+
+
+def _bytes_to_leaf(b: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.uint8:
+        return b.reshape(shape)
+    itemsize = dtype.itemsize
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    grouped = b.reshape(n, itemsize)
+    flat = jax.lax.bitcast_convert_type(grouped, dtype)
+    return flat.reshape(shape)
+
+
+def pytree_to_packet(tree, s: int = 8) -> tuple[jnp.ndarray, PacketSpec]:
+    """Flatten a pytree into one GF(2^s) symbol packet (bit-exact)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    byte_chunks = [_leaf_to_bytes(l) for l in leaves]
+    b = (jnp.concatenate(byte_chunks) if byte_chunks
+         else jnp.zeros((0,), jnp.uint8))
+    spec = PacketSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(jnp.asarray(l).dtype for l in leaves),
+        s=s,
+        n_bytes=int(b.shape[0]),
+    )
+    return bytes_to_symbols(b, s), spec
+
+
+def packet_to_pytree(packet: jnp.ndarray, spec: PacketSpec):
+    """Reassemble the pytree from a symbol packet (bit-exact inverse)."""
+    b = symbols_to_bytes(packet, spec.s)[: spec.n_bytes]
+    leaves = []
+    off = 0
+    for shape, dtype in zip(spec.shapes, spec.dtypes):
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = n * jnp.dtype(dtype).itemsize
+        leaves.append(_bytes_to_leaf(b[off: off + nbytes], shape, dtype))
+        off += nbytes
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# stacking clients
+# ---------------------------------------------------------------------------
+
+def stack_packets(packets: list[jnp.ndarray]) -> jnp.ndarray:
+    """K same-length packets -> P matrix (K, L) for RLNC (paper eq. P)."""
+    L = packets[0].shape[0]
+    for p in packets:
+        if p.shape != (L,):
+            raise ValueError("all client packets must have equal length")
+    return jnp.stack(packets, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# quantized variant (paper ref [22]: pruning-quantization coding design)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantSpec:
+    scales: tuple[float, ...]
+    zeros: tuple[float, ...]
+
+
+def quantize_pytree(tree, bits: int = 8):
+    """Per-tensor affine quantization to uint8 in [0, 2^bits)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    qleaves, scales, zeros = [], [], []
+    qmax = float(2**bits - 1)
+    for l in leaves:
+        l = jnp.asarray(l, jnp.float32)
+        lo = jnp.min(l)
+        hi = jnp.max(l)
+        scale = jnp.maximum((hi - lo) / qmax, 1e-12)
+        q = jnp.clip(jnp.round((l - lo) / scale), 0, qmax).astype(jnp.uint8)
+        qleaves.append(q)
+        scales.append(float(scale))
+        zeros.append(float(lo))
+    qtree = jax.tree_util.tree_unflatten(treedef, qleaves)
+    return qtree, QuantSpec(tuple(scales), tuple(zeros))
+
+
+def dequantize_pytree(qtree, qspec: QuantSpec):
+    leaves, treedef = jax.tree_util.tree_flatten(qtree)
+    out = [
+        jnp.asarray(q, jnp.float32) * s + z
+        for q, s, z in zip(leaves, qspec.scales, qspec.zeros)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,162 @@
+"""Random Linear Network Coding over GF(2^s) (paper §II-B, Alg. 1).
+
+Encoded tuples are ``(a_i, C_i)``: the coding vector and the coded
+packet.  The server stacks K tuples into (A, C) and decodes with
+Gaussian elimination when A is invertible; otherwise the FL round is
+skipped (Alg. 1, else-branch).
+
+`recode` implements the network-interior operation that Prop. 2's η
+counts: a relay holding tuples (A, C) emits fresh random combinations
+(R·A, R·C) without ever decoding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .gf import GF, ge_solve, get_field, rank as gf_rank
+
+
+@dataclass(frozen=True)
+class EncodedBatch:
+    """K encoded tuples: A (n, K) coding matrix, C (n, L) coded packets."""
+
+    A: jnp.ndarray
+    C: jnp.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.A.shape[1]
+
+    def __getitem__(self, idx) -> "EncodedBatch":
+        return EncodedBatch(A=self.A[idx], C=self.C[idx])
+
+    def concat(self, other: "EncodedBatch") -> "EncodedBatch":
+        return EncodedBatch(
+            A=jnp.concatenate([self.A, other.A], 0),
+            C=jnp.concatenate([self.C, other.C], 0),
+        )
+
+
+def random_coding_matrix(key, n: int, K: int, s: int) -> jnp.ndarray:
+    """n random coding vectors over GF(2^s) — uniform incl. zero (RLNC)."""
+    return get_field(s).random_elements(key, (n, K))
+
+
+def encode(P: jnp.ndarray, A: jnp.ndarray, s: int,
+           *, impl: str = "auto") -> EncodedBatch:
+    """C = A·P over GF(2^s).  P: (K, L) symbols, A: (n, K) coefficients.
+
+    impl: 'auto' | 'jnp' | 'pallas'.  'auto' picks the Pallas GF kernel
+    when the packet is large enough to amortize it, else the jnp path.
+    """
+    from repro.kernels import ops as kops  # late import, avoids cycle
+    C = kops.gf_matmul(A, P, s=s, impl=impl)
+    return EncodedBatch(A=jnp.asarray(A, jnp.uint8), C=C)
+
+
+def sparse_coding_matrix(key, n: int, K: int, s: int,
+                         density: float = 0.5) -> jnp.ndarray:
+    """Sparse RLNC: each coefficient is zero w.p. (1-density), nonzero
+    uniform otherwise, with at least one nonzero per row.  Encode cost
+    scales with density; decode-failure probability rises as density
+    falls (standard sparse-NC trade-off — benchmarked, not assumed)."""
+    field = get_field(s)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = field.random_nonzero(k1, (n, K))
+    keep = jax.random.bernoulli(k2, density, (n, K))
+    # guarantee one nonzero per row (place at a random column)
+    col = jax.random.randint(k3, (n,), 0, K)
+    keep = keep.at[jnp.arange(n), col].set(True)
+    return jnp.where(keep, vals, jnp.uint8(0))
+
+
+def systematic_coding_matrix(key, n: int, K: int, s: int) -> jnp.ndarray:
+    """First K rows identity (original packets), remaining rows random.
+
+    Systematic RLNC: receivers that get the plain rows decode for free;
+    coded rows repair erasures.  (Beyond-paper convenience, standard in
+    the NC literature the paper builds on.)
+    """
+    field = get_field(s)
+    eye = jnp.eye(K, dtype=jnp.uint8)
+    if n <= K:
+        return eye[:n]
+    extra = field.random_elements(key, (n - K, K))
+    return jnp.concatenate([eye, extra], axis=0)
+
+
+def recode(batch: EncodedBatch, key, n_out: int, s: int) -> EncodedBatch:
+    """Relay recoding: emit n_out fresh random combinations of the
+    received tuples.  New coding vectors compose linearly: A' = R·A."""
+    field = get_field(s)
+    R = field.random_elements(key, (n_out, batch.n))
+    return EncodedBatch(A=field.matmul(R, batch.A),
+                        C=field.matmul(R, batch.C))
+
+
+def decodable(batch: EncodedBatch, s: int) -> jnp.ndarray:
+    """True iff the received coding matrix has full column rank K."""
+    return gf_rank(get_field(s), batch.A) == batch.K
+
+
+def decode(batch: EncodedBatch, s: int):
+    """(ok, P_hat): Gaussian-elimination decode of K tuples (Alg. 1).
+
+    Requires n == K; for n > K callers first select K rows (e.g. via
+    `select_decodable_rows`) — matching the paper's server that waits
+    for exactly K tuples.
+    """
+    if batch.n != batch.K:
+        raise ValueError(
+            f"decode needs square A; got {batch.n} tuples for K={batch.K}"
+        )
+    field = get_field(s)
+    return ge_solve(field, batch.A, batch.C)
+
+
+def select_decodable_rows(batch: EncodedBatch, s: int) -> EncodedBatch:
+    """Greedily pick K linearly-independent tuples out of n >= K (numpy
+    host-side helper for channel simulations; not jit)."""
+    import numpy as np
+
+    field = get_field(s)
+    A = np.asarray(batch.A)
+    picked: list[int] = []
+    for i in range(A.shape[0]):
+        cand = picked + [i]
+        sub = jnp.asarray(A[cand])
+        if int(gf_rank(field, sub)) == len(cand):
+            picked.append(i)
+        if len(picked) == batch.K:
+            break
+    idx = jnp.asarray(picked + [0] * (batch.K - len(picked)), jnp.int32)
+    return EncodedBatch(A=batch.A[idx], C=batch.C[idx])
+
+
+# ---------------------------------------------------------------------------
+# float-field RLNC (mesh/in-datacenter variant, DESIGN.md §3b)
+# ---------------------------------------------------------------------------
+
+def float_coding_matrix(key, n: int, K: int) -> jnp.ndarray:
+    """Random real coefficients (Gaussian): invertible almost surely."""
+    return jax.random.normal(key, (n, K), jnp.float32)
+
+
+def float_encode(P: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ P over the reals. P: (K, L) float updates."""
+    return A.astype(P.dtype) @ P
+
+
+def float_decode(A: jnp.ndarray, C: jnp.ndarray):
+    """(ok, P_hat) via linear solve; ok = well-conditioned."""
+    P_hat = jnp.linalg.solve(A.astype(jnp.float32), C.astype(jnp.float32))
+    cond_ok = jnp.all(jnp.isfinite(P_hat))
+    return cond_ok, P_hat.astype(C.dtype)

@@ -1,0 +1,80 @@
+"""Security & error-probability analysis (paper §III-A.1, Prop. 2).
+
+* `error_probability_bound(s, eta)` — the paper's eq. (10):
+      p_e <= 1 - (1 - 2^-s)^η
+  the FedNC decode-failure bound with one receiver (d=1).
+* `simulate_error_probability` — Monte-Carlo decode-failure rate of a
+  FedNC round pushed through a MultiHopChannel; validates Table I's
+  'Error Probability' column (0.5 / 0.0625 / 0.0039 / 0.3239).
+* `eavesdropper_leak_probability` — closed-form probability that an
+  attacker intercepting each of the K uploaded tuples independently
+  with probability p achieves full rank (= must capture all K tuples
+  if only K are ever sent, scaled by the rank statistics of RLNC).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def error_probability_bound(s: int, eta: int) -> float:
+    """Paper eq. (10): p_e <= 1 - (1 - 2^-s)^η."""
+    return 1.0 - (1.0 - 2.0 ** (-s)) ** eta
+
+
+def singular_probability_uniform(K: int, s: int) -> float:
+    """Exact P[K×K uniform GF(2^s) matrix is singular]:
+    1 - Π_{i=1..K} (1 - q^-i),  q = 2^s."""
+    q = float(2**s)
+    p_ns = 1.0
+    for i in range(1, K + 1):
+        p_ns *= 1.0 - q ** (-i)
+    return 1.0 - p_ns
+
+
+def simulate_error_probability(K: int, s: int, eta: int, trials: int,
+                               seed: int = 0) -> float:
+    """Monte-Carlo decode-failure rate through η re-coding hops."""
+    import jax
+    import jax.numpy as jnp
+
+    from .channel import MultiHopChannel
+    from .gf import get_field
+    from .rlnc import EncodedBatch, random_coding_matrix
+
+    field = get_field(s)
+    rng = np.random.default_rng(seed)
+    failures = 0
+    for t in range(trials):
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        A = random_coding_matrix(key, K, K, s)
+        # packets irrelevant for rank statistics; 1-symbol payload
+        batch = EncodedBatch(A=A, C=jnp.zeros((K, 1), jnp.uint8))
+        # Prop. 2's η counts EVERY link carrying independent random
+        # coefficients — the source's own encode is one of them, so the
+        # network applies η-1 further recoding hops.
+        chan = MultiHopChannel(eta=max(eta - 1, 0),
+                               seed=int(rng.integers(0, 2**31 - 1)))
+        _, rep = chan.transmit_encoded(batch, s)
+        failures += int(not rep.decodable)
+    return failures / trials
+
+
+def eavesdropper_full_leak_probability(K: int, p_intercept: float,
+                                       s: int = 8) -> float:
+    """P[attacker reaches rank K] when each of the K transmitted coded
+    tuples is intercepted independently with prob p.
+
+    Needs all K tuples AND the K×K coding matrix nonsingular:
+        p^K · Π_{i=1..K}(1 - q^-i).
+    Compare FedAvg: expected leaked client models = p·K > 0 for any p.
+    """
+    q = float(2**s)
+    p_ns = 1.0
+    for i in range(1, K + 1):
+        p_ns *= 1.0 - q ** (-i)
+    return (p_intercept ** K) * p_ns
+
+
+def fedavg_expected_leak(K: int, p_intercept: float) -> float:
+    """Expected number of client models leaked without coding."""
+    return p_intercept * K

@@ -1,0 +1,9 @@
+"""Data pipelines: synthetic image/token sources + FL partitioners."""
+from .partition import iid_partition, mixed_noniid_partition
+from .synthetic import SyntheticImageDataset, make_image_dataset
+from .tokens import TokenStream, make_token_stream
+
+__all__ = [
+    "iid_partition", "mixed_noniid_partition", "SyntheticImageDataset",
+    "make_image_dataset", "TokenStream", "make_token_stream",
+]

@@ -1,0 +1,9 @@
+"""FL substrate: local training, server strategies, round orchestration."""
+from .client import LocalTrainer
+from .rounds import FLExperiment, RoundLog, run_experiment
+from .server import FedAvgStrategy, FedNCStrategy
+
+__all__ = [
+    "LocalTrainer", "FLExperiment", "RoundLog", "run_experiment",
+    "FedAvgStrategy", "FedNCStrategy",
+]

@@ -1,0 +1,55 @@
+"""Client-side local training (paper: local_train(w, D_k), 5 epochs).
+
+Model-agnostic: the trainer owns a jitted SGD/Adam step over a
+user-supplied `loss_fn(params, batch) -> (loss, aux)` and runs E local
+epochs over the client's partition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, apply_updates
+
+
+@dataclass
+class LocalTrainer:
+    """loss_fn(params, batch) -> (loss, aux).  If `state_merge` is set,
+    it is called as state_merge(params, aux) after every optimizer step
+    — this is how non-gradient state (e.g. the CNN's BatchNorm running
+    statistics) flows back into the client parameters so that FedNC
+    packets carry it."""
+
+    loss_fn: Callable[[Any, Any], tuple[jnp.ndarray, Any]]
+    optimizer: Optimizer
+    local_epochs: int = 5
+    state_merge: Callable[[Any, Any], Any] = None
+
+    def __post_init__(self):
+        def step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            updates, opt_state = self.optimizer.update(
+                grads, opt_state, params)
+            params = apply_updates(params, updates)
+            if self.state_merge is not None:
+                params = self.state_merge(params, aux)
+            return params, opt_state, loss
+        self._step = jax.jit(step)
+
+    def train(self, params: Any, batch_iter: Iterable) -> tuple[Any, float]:
+        """Run local epochs; returns (new_params, mean_loss).
+
+        `batch_iter` must already encode the epoch count (see
+        data.synthetic.batches(epochs=...)); fresh optimizer state per
+        round, as in FedAvg."""
+        opt_state = self.optimizer.init(params)
+        losses = []
+        for batch in batch_iter:
+            params, opt_state, loss = self._step(params, opt_state, batch)
+            losses.append(float(loss))
+        mean = sum(losses) / max(len(losses), 1)
+        return params, mean

@@ -1,0 +1,92 @@
+"""Round orchestration: the outer FL loop of Algorithm 1.
+
+Each round: sample K participants -> local training -> strategy
+aggregation (FedAvg or FedNC, through the configured channel) ->
+evaluate the global model.  Histories feed the paper-experiment
+benchmarks (Fig. 3 / Fig. 4 / Table I).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticImageDataset, batches
+from .client import LocalTrainer
+
+
+@dataclass
+class RoundLog:
+    round: int
+    decoded: bool
+    n_aggregated: int
+    train_loss: float
+    test_acc: float
+    wall_s: float
+
+
+@dataclass
+class FLExperiment:
+    """Everything one FL run needs, bundled."""
+    trainer: LocalTrainer
+    strategy: Any                       # FedAvgStrategy | FedNCStrategy
+    partitions: Sequence[np.ndarray]    # per-client index sets
+    dataset: SyntheticImageDataset
+    test_set: SyntheticImageDataset
+    eval_fn: Callable[[Any, Any, Any], float]   # (params, x, y) -> acc
+    clients_per_round: int = 10
+    batch_size: int = 32
+    seed: int = 0
+
+
+def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
+                   *, eval_every: int = 1, verbose: bool = False
+                   ) -> list[RoundLog]:
+    rng = np.random.default_rng(exp.seed)
+    global_params = init_params
+    N = len(exp.partitions)
+    logs: list[RoundLog] = []
+
+    for t in range(rounds):
+        t0 = time.perf_counter()
+        part = rng.choice(N, size=exp.clients_per_round, replace=False)
+        client_params, losses, sizes = [], [], []
+        for k in part:
+            idx = exp.partitions[k]
+            ds_k = exp.dataset.subset(idx)
+            it = batches(ds_k, min(exp.batch_size, max(len(ds_k), 1)),
+                         seed=int(rng.integers(0, 2**31 - 1)),
+                         epochs=exp.trainer.local_epochs)
+            p_k, loss_k = exp.trainer.train(global_params, it)
+            client_params.append(p_k)
+            losses.append(loss_k)
+            sizes.append(len(ds_k))
+
+        weights = np.asarray(sizes, np.float32)
+        weights = weights / weights.sum()
+        result = exp.strategy.aggregate(client_params, weights,
+                                        global_params, rng)
+        global_params = result.global_params
+
+        acc = float("nan")
+        if (t + 1) % eval_every == 0:
+            acc = exp.eval_fn(global_params, exp.test_set.images,
+                              exp.test_set.labels)
+        logs.append(RoundLog(t, bool(result.decoded), result.n_aggregated,
+                             float(np.mean(losses)), acc,
+                             time.perf_counter() - t0))
+        if verbose:
+            print(f"round {t:3d} decoded={result.decoded} "
+                  f"loss={np.mean(losses):.4f} acc={acc:.4f}")
+    return logs
+
+
+def final_accuracy(logs: list[RoundLog], k_last: int = 5) -> float:
+    accs = [l.test_acc for l in logs if not np.isnan(l.test_acc)]
+    if not accs:
+        return float("nan")
+    return float(np.mean(accs[-k_last:]))

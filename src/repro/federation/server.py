@@ -1,0 +1,91 @@
+"""Server aggregation strategies: FedAvg (paper §II-A baseline) and
+FedNC (paper Alg. 1), both behind one interface so round loops and
+experiments swap them freely.
+
+The channel between clients and server is pluggable (core.channel):
+`None` (ideal), ErasureChannel, BlindBoxChannel, MultiHopChannel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fednc as fednc_mod
+from repro.core import packets as pkt
+from repro.core.channel import BlindBoxChannel
+from repro.core.fednc import FedNCConfig, RoundResult
+from repro.core.gf import get_field, rank as gf_rank
+from repro.core.rlnc import EncodedBatch, random_coding_matrix
+
+
+@dataclass
+class FedAvgStrategy:
+    """Classic FedAvg; under a BlindBoxChannel the server aggregates
+    whatever K draws it happens to receive (duplicates included) —
+    the paper's 'blind box effect'."""
+
+    channel: Any = None
+
+    def aggregate(self, client_params: Sequence[Any],
+                  weights: Sequence[float], prev_global: Any,
+                  rng: np.random.Generator) -> RoundResult:
+        if isinstance(self.channel, BlindBoxChannel):
+            K = len(client_params)
+            draws = rng.integers(0, K, size=self.channel.budget)
+            chosen = [client_params[i] for i in draws]
+            w = np.asarray([weights[i] for i in draws], np.float32)
+            w = w / w.sum()
+            agg = jax.tree_util.tree_map(
+                lambda *xs: sum(
+                    wk * jnp.asarray(x, jnp.float32)
+                    for wk, x in zip(w, xs)).astype(xs[0].dtype),
+                *chosen)
+            distinct = len(set(draws.tolist()))
+            from repro.core.channel import ChannelReport
+            rep = ChannelReport(self.channel.budget, self.channel.budget,
+                                True, distinct_sources=distinct)
+            return RoundResult(agg, True, rep, distinct)
+        return fednc_mod.fedavg_round(client_params, weights, prev_global,
+                                      channel=self.channel)
+
+
+@dataclass
+class FedNCStrategy:
+    """FedNC (Alg. 1).  Under a BlindBoxChannel every received packet
+    is a *fresh coded* packet — random mixtures of ALL K participants —
+    so any full-rank K of them aggregate every client's contribution."""
+
+    config: FedNCConfig = field(default_factory=FedNCConfig)
+    channel: Any = None
+
+    def aggregate(self, client_params: Sequence[Any],
+                  weights: Sequence[float], prev_global: Any,
+                  rng: np.random.Generator) -> RoundResult:
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        cfg = self.config
+        if isinstance(self.channel, BlindBoxChannel):
+            # encode once per emitted packet: the network multicasts
+            # fresh combinations; server keeps `budget` of them.
+            rows = []
+            spec = None
+            for p in client_params:
+                sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
+                rows.append(sym)
+            P = pkt.stack_packets(rows)
+            K = len(rows)
+            n = self.channel.budget
+            A = random_coding_matrix(key, n, K, cfg.s)
+            from repro.core.rlnc import encode as rl_encode
+            batch = rl_encode(P, A, cfg.s, impl=cfg.kernel_impl)
+            if int(gf_rank(get_field(cfg.s), batch.A)) < K:
+                from repro.core.channel import ChannelReport
+                return RoundResult(prev_global, False,
+                                   ChannelReport(n, n, False), 0)
+            return fednc_mod.decode_and_aggregate(
+                batch, spec, weights, prev_global, cfg)
+        return fednc_mod.fednc_round(client_params, weights, prev_global,
+                                     cfg, key, channel=self.channel)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for FedNC's GF(2^s) coding hot-spot.
+
+gf_matmul.py — GF(2^s) coded matmul (clmul formulation, VMEM-tiled)
+gf2_xor.py   — GF(2) masked-XOR fast path (s=1)
+ops.py       — jitted dispatch wrappers (jnp oracle on CPU, Pallas on TPU)
+ref.py       — pure-jnp oracles (table-based; independent formulation)
+"""
+from . import ops, ref

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+§Perf motivation (EXPERIMENTS.md, Pair B): the prefill roofline is
+memory-bound because the q-chunked pure-JAX attention still
+materializes (B, H, chunk, T) probabilities in HBM.  This kernel keeps
+the running max / normalizer / accumulator in VMEM and never writes
+scores out — the standard flash schedule, tiled for the MXU
+(block sizes multiples of 128).
+
+Layout: q/k/v arrive as (BH, S, hd) (heads folded into batch); the
+grid is (BH, S/block_q); each program loops over k-blocks with an
+online-softmax carry.  Validated in interpret mode against the
+pure-jnp oracle (models.attention._attend) in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+            seq_len: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    hd = q.shape[-1]
+
+    n_kblocks = seq_len // block_k
+    if causal:
+        # blocks beyond the diagonal are fully masked; loop bound is
+        # data-independent per q-block index
+        last = (qi + 1) * block_q
+        n_live = (last + block_k - 1) // block_k
+    else:
+        n_live = n_kblocks
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = q @ k.T                                   # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))   # (bq,)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_folded(q, k, v, *, causal: bool = True,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = True):
+    """q/k/v: (BH, S, hd) with S divisible by the block sizes."""
+    BH, S, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    scale = 1.0 / np.sqrt(hd)
+    grid = (BH, S // block_q)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          seq_len=S, causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q/k/v: (B, S, H, hd) — GQA callers expand KV first.  Pads S to
+    the block size; returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    pad = (-S) % max(block_q, block_k)
+    if pad and not causal:
+        raise ValueError("non-causal flash requires S % block == 0 "
+                         "(zero-padded keys would receive attention)")
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zp(q), zp(k), zp(v)
+    Sp = S + pad
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    out = flash_attention_folded(fold(q), fold(k), fold(v),
+                                 causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: GF(2) coded combine (the s=1 fast path).
+
+For s=1 the coding coefficients are bits and the field product
+degenerates to a masked XOR: C[i] = XOR_{k : A[i,k]=1} P[k].  The
+combination acts on whole bytes (bit-planes mix independently), so the
+kernel streams the raw uint8 packet matrix — no symbol splitting, no
+multiplies.  This is the cheapest FedNC configuration the paper
+evaluates (Table I row s=1) and is bandwidth-bound by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_L = 4096  # bytes per tile; multiple of 128
+
+
+def _kernel(a_ref, p_ref, c_ref, *, K: int):
+    A = a_ref[...].astype(jnp.int32)      # (n, K) in {0,1}
+    P = p_ref[...].astype(jnp.int32)      # (K, bL)
+    n = A.shape[0]
+    acc = jnp.zeros((n, P.shape[1]), jnp.int32)
+    for k in range(K):
+        mask = (A[:, k] & 1)[:, None]     # (n, 1)
+        acc = acc ^ (P[k][None, :] * mask)
+    c_ref[...] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def gf2_matmul_pallas(
+    A: jnp.ndarray,
+    P: jnp.ndarray,
+    *,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """C = A·P over GF(2).  A: (n, K) {0,1} uint8; P: (K, L) uint8 bytes."""
+    A = jnp.asarray(A, jnp.uint8)
+    P = jnp.asarray(P, jnp.uint8)
+    n, K = A.shape
+    K2, L = P.shape
+    if K2 != K:
+        raise ValueError(f"A is (n,{K}) but P is ({K2},L)")
+    if L == 0:
+        return jnp.zeros((n, 0), jnp.uint8)
+
+    pad = (-L) % block_l
+    Pp = jnp.pad(P, ((0, 0), (0, pad)))
+    Lp = L + pad
+    grid = (Lp // block_l,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, K), lambda m: (0, 0)),
+            pl.BlockSpec((K, block_l), lambda m: (0, m)),
+        ],
+        out_specs=pl.BlockSpec((n, block_l), lambda m: (0, m)),
+        out_shape=jax.ShapeDtypeStruct((n, Lp), jnp.uint8),
+        interpret=interpret,
+    )(A, Pp)
+    return out[:, :L]

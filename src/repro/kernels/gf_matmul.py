@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: GF(2^s) coded matmul  C = A · P.
+
+This is FedNC's compute hot-spot: every round the K client packets
+(K x L symbol matrix P, L = model bytes — millions) are mixed by the
+(n x K) coding matrix A, and decode applies A^-1 the same way.
+
+TPU adaptation (DESIGN.md §3a): GPU RLNC codes use 256-entry log/exp
+lookup tables, but scattered gathers are the wrong shape for the TPU
+VPU.  Instead we compute the field product as a **carry-less multiply +
+polynomial reduction**, which is pure bitwise/shift vector arithmetic:
+
+    clmul(a, b) = XOR_{i: b_i=1} (a << i)            (degree <= 2s-2)
+    a *_GF b    = clmul(a, b) mod primitive_poly(s)
+
+Both loops are static (s <= 8 iterations each) and fully vectorized
+over the packet block, so the kernel is a streaming VPU workload tiled
+for VMEM: A (n x K) stays resident; P/C move through HBM->VMEM in
+(K x BLOCK_L) / (n x BLOCK_L) tiles.  The MXU is deliberately unused —
+GF(2^s) has no systolic mapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gf import PRIMITIVE_POLY
+
+# Symbols are uint8; compute in int32 lanes (native VPU width).
+_COMPUTE_DTYPE = jnp.int32
+
+DEFAULT_BLOCK_L = 2048  # lane-dim tile; multiple of 128
+
+
+def _gf_mul_vec(a, b, s: int):
+    """Vectorized GF(2^s) product of int32 arrays holding s-bit values."""
+    poly = PRIMITIVE_POLY[s]
+    acc = jnp.zeros_like(a)
+    # carry-less multiply: acc = XOR_i (a << i) where bit i of b is set
+    for i in range(s):
+        bit = (b >> i) & 1
+        acc = acc ^ ((a << i) * bit)
+    # reduce modulo the primitive polynomial (degree s)
+    for i in range(2 * s - 2, s - 1, -1):
+        bit = (acc >> i) & 1
+        acc = acc ^ ((poly << (i - s)) * bit)
+    return acc
+
+
+def _kernel(a_ref, p_ref, c_ref, *, s: int, K: int):
+    A = a_ref[...].astype(_COMPUTE_DTYPE)          # (n, K)
+    P = p_ref[...].astype(_COMPUTE_DTYPE)          # (K, bL)
+    n = A.shape[0]
+    acc = jnp.zeros((n, P.shape[1]), _COMPUTE_DTYPE)
+    for k in range(K):                             # static, K small
+        coeff = A[:, k][:, None]                   # (n, 1)
+        acc = acc ^ _gf_mul_vec(
+            jnp.broadcast_to(coeff, acc.shape),
+            jnp.broadcast_to(P[k][None, :], acc.shape),
+            s,
+        )
+    c_ref[...] = acc.astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s", "block_l", "interpret")
+)
+def gf_matmul_pallas(
+    A: jnp.ndarray,
+    P: jnp.ndarray,
+    *,
+    s: int = 8,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """C = A·P over GF(2^s) via the Pallas kernel.
+
+    A: (n, K) uint8 coding matrix.  P: (K, L) uint8 symbol packets.
+    Returns (n, L) uint8.  `interpret=True` executes on CPU for
+    validation; on a real TPU pass interpret=False.
+    """
+    A = jnp.asarray(A, jnp.uint8)
+    P = jnp.asarray(P, jnp.uint8)
+    n, K = A.shape
+    K2, L = P.shape
+    if K2 != K:
+        raise ValueError(f"A is (n,{K}) but P is ({K2},L)")
+    if L == 0:
+        return jnp.zeros((n, 0), jnp.uint8)
+
+    # pad the lane dim to the tile size
+    pad = (-L) % block_l
+    Pp = jnp.pad(P, ((0, 0), (0, pad)))
+    Lp = L + pad
+    grid = (Lp // block_l,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, s=s, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, K), lambda m: (0, 0)),        # A resident
+            pl.BlockSpec((K, block_l), lambda m: (0, m)),  # P tile
+        ],
+        out_specs=pl.BlockSpec((n, block_l), lambda m: (0, m)),
+        out_shape=jax.ShapeDtypeStruct((n, Lp), jnp.uint8),
+        interpret=interpret,
+    )(A, Pp)
+    return out[:, :L]

@@ -1,0 +1,47 @@
+"""Jitted public wrappers around the GF coding kernels.
+
+`impl` selects the execution path:
+  * 'jnp'    — table-based jnp oracle (fast on CPU, default here)
+  * 'pallas' — the Pallas TPU kernel (interpret=True on CPU)
+  * 'auto'   — pallas on TPU backends, jnp elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .gf_matmul import gf_matmul_pallas
+from .gf2_xor import gf2_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gf_matmul(A, P, *, s: int = 8, impl: str = "auto") -> jnp.ndarray:
+    """C = A·P over GF(2^s); dispatches jnp / Pallas."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        if s == 1:
+            return ref.gf2_matmul_ref(A, P)
+        return ref.gf_matmul_ref(A, P, s)
+    if impl == "pallas":
+        interpret = not _on_tpu()
+        if s == 1:
+            return gf2_matmul_pallas(A, P, interpret=interpret)
+        return gf_matmul_pallas(A, P, s=s, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def gf2_combine(A, P, *, impl: str = "auto") -> jnp.ndarray:
+    """GF(2) byte-stream combine (s=1 fast path, coefficient bits)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return ref.gf2_matmul_ref(A, P)
+    if impl == "pallas":
+        return gf2_matmul_pallas(A, P, interpret=not _on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the GF coding kernels.
+
+These are the correctness references the Pallas kernels are tested
+against (interpret=True on CPU).  They use the table-based field ops
+from repro.core.gf — an independent implementation from the kernels'
+carry-less-multiply formulation, so agreement is meaningful.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.gf import get_field, xor_reduce
+
+
+def gf_matmul_ref(A: jnp.ndarray, P: jnp.ndarray, s: int) -> jnp.ndarray:
+    """C = A·P over GF(2^s). A: (n, K) uint8, P: (K, L) uint8."""
+    return get_field(s).matmul(A, P)
+
+
+def gf2_matmul_ref(A: jnp.ndarray, P: jnp.ndarray) -> jnp.ndarray:
+    """GF(2) fast path: coefficients in {0,1}, symbols = raw bytes.
+
+    C[i] = XOR over {k : A[i,k]=1} of P[k].  Operates on whole bytes —
+    for s=1 the linear combination is coefficient-wise XOR regardless of
+    how the byte is split into bits.
+    """
+    A = jnp.asarray(A, jnp.uint8)
+    P = jnp.asarray(P, jnp.uint8)
+    masked = jnp.where((A[:, :, None] & 1) != 0, P[None, :, :], jnp.uint8(0))
+    return xor_reduce(masked, axis=1)

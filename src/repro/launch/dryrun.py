@@ -1,0 +1,303 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input
+shape) on the production mesh, record memory/cost/collective analysis.
+
+The two os.environ lines below must stay the FIRST statements after
+this docstring — before any other import, jax included: jax locks the
+device count at first init, and ONLY the dry-run wants 512 placeholder
+CPU devices (tests/benches see 1).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--agg fednc_naive] \
+        [--out EXPERIMENTS/dryrun.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.launch import roofline as rl
+from repro.launch import sharding as sh
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh, num_clients
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+DEFAULT_OUT = "EXPERIMENTS/dryrun_results.json"
+
+
+def count_params(shapes_tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in
+               jax.tree_util.tree_leaves(shapes_tree))
+
+
+def count_active_params(shapes_tree: Any, cfg) -> int:
+    """Active params per token: routed experts scaled by top_k/E."""
+    flat = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+    total = 0.0
+    for path, leaf in flat:
+        name = "/".join(sh._key_str(k) for k in path)
+        n = float(np.prod(leaf.shape))
+        if cfg.moe is not None and "moe/w_" in name:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    return int(total)
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    total = (out.get("argument_size_in_bytes", 0)
+             + out.get("output_size_in_bytes", 0)
+             + out.get("temp_size_in_bytes", 0)
+             - out.get("alias_size_in_bytes", 0))
+    out["per_device_total_bytes"] = total
+    return out
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in (ca or {}).items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             agg_mode: str = "fednc_naive", keep_hlo: bool = False,
+             moe_shard: str = "dmodel",
+             mla_absorbed: bool = False,
+             attn_bf16: bool = False,
+             moe_act_shard: bool = False,
+             grad_kshard: bool = False,
+             agg_bf16: bool = False,
+             q_chunk: int = 0,
+             variant: str = "baseline") -> dict:
+    """Lower + compile one (arch, shape, mesh) and extract analyses."""
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    t0 = time.time()
+    cfg = get_config(arch)
+    sh.set_moe_inner_shard(moe_shard)
+    attn_mod.set_attend_bf16(attn_bf16)
+    if q_chunk:
+        attn_mod.Q_CHUNK = q_chunk
+    moe_mod.set_moe_act_spec(("model", "data", None)
+                             if moe_act_shard else None)
+    if mla_absorbed and cfg.mla is not None:
+        from dataclasses import replace as _rp
+        cfg = cfg.with_overrides(mla=_rp(cfg.mla, absorbed=True))
+    shape = sp.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(np.prod(list(mesh.shape.values()))),
+        "agg_mode": agg_mode if shape.kind == "train" else None,
+        "variant": variant,
+        "status": "started",
+    }
+    key = jax.random.PRNGKey(0)
+
+    params_s = jax.eval_shape(lambda: tf.init_lm(key, cfg))
+    n_params = count_params(params_s)
+    n_active = count_active_params(params_s, cfg)
+    rec["n_params"] = n_params
+    rec["n_active_params"] = n_active
+    param_sh = sh.param_shardings(params_s, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            big = n_params > 3e10
+            opt = adamw(1e-4, state_dtype=jnp.bfloat16 if big
+                        else jnp.float32)
+            opt_s = jax.eval_shape(opt.init, params_s)
+            opt_sh = sh.opt_shardings(opt_s, mesh, params_s)
+            batch = sp.batch_inputs(cfg, shape)
+            batch_sh = sh.batch_shardings(batch, mesh)
+            step = make_train_step(cfg, opt, num_clients=num_clients(mesh),
+                                   agg_mode=agg_mode,
+                                   kshard_grads=grad_kshard,
+                                   agg_bf16=agg_bf16)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh, sh.replicated(mesh)),
+                out_shardings=(param_sh, opt_sh, sh.replicated(mesh)),
+            )
+            key_s = jax.ShapeDtypeStruct(key.shape, key.dtype)
+            lowered = jitted.lower(params_s, opt_s, batch, key_s)
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            batch = sp.batch_inputs(cfg, shape)
+            batch_sh = sh.batch_shardings(batch, mesh)
+            window = sp.decode_window(cfg, shape)
+            step = make_prefill_step(cfg, cache_len=shape.seq_len,
+                                     window=window)
+            jitted = jax.jit(step, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_s, batch)
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            d_in = sp.decode_inputs(cfg, shape)
+            cache_sh = sh.cache_shardings(d_in["cache"], mesh)
+            tok_sh = sh.batch_shardings({"t": d_in["token"]}, mesh)["t"]
+            window = sp.decode_window(cfg, shape)
+            step = make_serve_step(cfg, window=window)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, tok_sh),
+                out_shardings=(tok_sh, tok_sh, cache_sh),
+            )
+            lowered = jitted.lower(params_s, d_in["cache"], d_in["token"])
+            tokens = shape.global_batch
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    rec["lower_s"] = round(t_lower - t0, 2)
+    rec["compile_s"] = round(t_compile - t_lower, 2)
+    rec["memory_analysis"] = _memory_analysis_dict(compiled)
+    rec["cost_analysis"] = _cost_analysis_dict(compiled)
+
+    hlo = compiled.as_text()
+    ana = rl.analyze_hlo(hlo)
+    rec["hlo_analysis"] = {
+        "flops_per_device": ana.flops,
+        "memory_bytes_per_device": ana.memory_bytes,
+        "collective_bytes_per_device": ana.collective_bytes,
+        "collective_count": ana.collective_count,
+        "collectives_by_type": ana.collectives_by_type,
+        "n_while_loops": ana.n_while_loops,
+    }
+    if keep_hlo:
+        rec["hlo_path"] = f"EXPERIMENTS/hlo/{arch}_{shape_name}_" \
+            f"{rec['mesh']}_{agg_mode}_{variant}.txt"
+        os.makedirs(os.path.dirname(rec["hlo_path"]), exist_ok=True)
+        with open(rec["hlo_path"], "w") as f:
+            f.write(hlo)
+
+    rec["roofline"] = rl.roofline_terms(ana.flops, ana.memory_bytes,
+                                        ana.collective_bytes)
+    rec["tokens_per_step"] = tokens
+    rec["model_flops"] = rl.model_flops(n_active, tokens,
+                                        training=shape.kind == "train")
+    chips = rec["chips"]
+    if ana.flops > 0:
+        rec["useful_flops_ratio"] = rec["model_flops"] / \
+            (ana.flops * chips)
+    rec["status"] = "ok"
+    return rec
+
+
+def append_result(rec: dict, out_path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    # replace any previous record for the same key
+    keyf = ("arch", "shape", "mesh", "agg_mode", "variant")
+    results = [r for r in results
+               if tuple(r.get(k) for k in keyf)
+               != tuple(rec.get(k) for k in keyf)]
+    results.append(rec)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(sp.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--agg", default="fednc_naive",
+                    choices=["plain", "fednc_naive", "fednc_blocked"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on this mesh")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--moe-shard", default="dmodel",
+                    choices=["dmodel", "dff"])
+    ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--attn-bf16", action="store_true")
+    ap.add_argument("--moe-act-shard", action="store_true")
+    ap.add_argument("--grad-kshard", action="store_true")
+    ap.add_argument("--agg-bf16", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--variant", default="baseline",
+                    help="label for §Perf iteration records")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCHITECTURES:
+            for s in sp.SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch, shape in pairs:
+        label = f"{arch} x {shape} ({'2x16x16' if args.multi_pod else '16x16'})"
+        try:
+            rec = run_pair(arch, shape, multi_pod=args.multi_pod,
+                           agg_mode=args.agg, keep_hlo=args.keep_hlo,
+                           moe_shard=args.moe_shard,
+                           mla_absorbed=args.mla_absorbed,
+                           attn_bf16=args.attn_bf16,
+                           moe_act_shard=args.moe_act_shard,
+                           grad_kshard=args.grad_kshard,
+                           agg_bf16=args.agg_bf16,
+                           q_chunk=args.q_chunk,
+                           variant=args.variant)
+            n_ok += 1
+            r = rec["roofline"]
+            print(f"[OK] {label}: compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s "
+                  f"bottleneck={r['bottleneck']} "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                  flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "agg_mode": args.agg, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[FAIL] {label}: {type(e).__name__}: {e}", flush=True)
+        append_result(rec, args.out)
+    print(f"done: {n_ok}/{len(pairs)} ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh: TPU v5e, 256 chips/pod, (data, model) = (16, 16);
+multi-pod adds a leading pod axis (2 pods = 512 chips).
+
+A FUNCTION, not a module constant — importing this module must never
+touch jax device state (tests run with 1 CPU device; only dryrun.py
+forces 512 host devices)."""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline tables.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_clients(mesh) -> int:
+    """FedNC 'clients' = data-parallel groups (DESIGN.md §3b)."""
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,255 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e targets):
+
+    compute    = dot_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+    memory     = hbm_bytes_per_device / HBM_bw               (819e9)
+    collective = collective_operand_bytes_per_device / ICI_bw (50e9)
+
+Why not compiled.cost_analysis()?  XLA's HloCostAnalysis visits a
+while-loop body ONCE — our models lax.scan the layer stack, so its
+flops/bytes under-count by the trip count (verified experimentally).
+Instead we parse the optimized per-device HLO ourselves and:
+
+  * recover loop trip counts from each while-condition's comparison
+    constant, propagating multipliers through nested loops/calls;
+  * count dot FLOPs (2·|out|·K from lhs_contracting_dims) wherever the
+    dot sits, times its computation's multiplier;
+  * approximate HBM traffic as Σ (operand + result bytes) over
+    kernel-level instructions (fusions, dots, copies, collectives) in
+    non-fused computations — fusion boundaries are materialization
+    points, fusion-internal temporaries stay in registers/VMEM;
+  * sum collective operand bytes by op type (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), async pairs
+    counted once.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+_KERNEL_OPS = ("fusion", "dot", "convolution", "copy", "custom-call",
+               "dynamic-update-slice", "dynamic-slice", "transpose",
+               "reduce", "broadcast", "concatenate", "scatter", "gather",
+               "sort", "iota", "reshape", "convert", "select", "compare",
+               "add", "multiply", "subtract", "divide", "pad", "slice",
+               "tuple", "get-tuple-element", "bitcast")
+# ops whose bytes we count toward HBM traffic at computation scope.
+# bitcast/tuple/get-tuple-element/reshape are free (aliasing).
+_FREE_OPS = {"bitcast", "tuple", "get-tuple-element", "reshape",
+             "parameter", "constant", "iota", "after-all"}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(?:\([^)]*\)|[a-z0-9\[\],{}<=\s]+?)\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+_COLL_RE = re.compile(
+    r"\b(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _dims(dims_str: str) -> tuple:
+    return tuple(int(d) for d in dims_str.split(",")) if dims_str else ()
+
+
+def _elems(dims: tuple) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _type_part(rhs: str) -> list[tuple[str, tuple]]:
+    """Result type(s) at the start of an instruction RHS."""
+    if rhs.startswith("("):
+        head = rhs[: rhs.index(")") + 1]
+    else:
+        head = rhs.split("(")[0]
+    return [(d, _dims(ds)) for d, ds in _SHAPE_RE.findall(head)]
+
+
+def _shapes_bytes(shapes: list[tuple[str, tuple]]) -> int:
+    return sum(_elems(dims) * _DTYPE_BYTES.get(d, 4) for d, dims in shapes)
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_count: int = 0
+    collectives_by_type: dict = field(default_factory=dict)
+    n_while_loops: int = 0
+
+
+def analyze_hlo(hlo_text: str) -> HloAnalysis:
+    # ---------------- pass 1: index computations & instructions
+    comps: dict[str, dict] = {}
+    cur = "__toplevel__"
+
+    def new_comp(name):
+        comps.setdefault(name, {
+            "colls": [], "whiles": [], "calls": [], "consts": [],
+            "dots": [], "mem": 0.0, "fused": "fused" in name,
+        })
+
+    new_comp(cur)
+    shapes: dict[str, list] = {}
+    entry = None
+
+    for line in hlo_text.splitlines():
+        if (not line.startswith(" ") and "{" in line
+                and "=" not in line.split("{")[0].split("(")[0]):
+            head = line.split("(")[0]
+            if "ENTRY" in head:
+                head = head.replace("ENTRY", "")
+            cur = head.strip().lstrip("%").strip()
+            if line.startswith("ENTRY"):
+                entry = cur
+            new_comp(cur)
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        out_shapes = _type_part(rhs)
+        if out_shapes:
+            shapes[name] = out_shapes
+        om = _OP_RE.match(rhs)
+        op = om.group(1) if om else ""
+        comp = comps[cur]
+
+        if op == "while":
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                comp["whiles"].append((wm.group(1), wm.group(2)))
+        for callee in _CALL_RE.findall(rhs):
+            comp["calls"].append(callee)
+        bm = _BRANCH_RE.search(rhs)
+        if bm:
+            comp["calls"].extend(
+                c.strip().lstrip("%") for c in bm.group(1).split(","))
+        for cc in _CONST_RE.findall(rhs):
+            v = int(cc)
+            if 1 <= v <= 50_000_000:
+                comp["consts"].append(v)
+
+        # dot flops (count inside fused computations too)
+        if op == "dot":
+            operands = _OPERAND_RE.findall(rhs.split("(", 1)[1])
+            lhs_name = operands[0] if operands else None
+            lc = _LHS_CONTRACT_RE.search(rhs)
+            if lhs_name in shapes and lc:
+                lhs_dims = shapes[lhs_name][0][1]
+                kdims = _dims(lc.group(1))
+                K = 1
+                for kd in kdims:
+                    if kd < len(lhs_dims):
+                        K *= lhs_dims[kd]
+                out_elems = sum(_elems(d) for _, d in out_shapes)
+                comp["dots"].append(2.0 * out_elems * K)
+
+        # collectives
+        cm = _COLL_RE.search(rhs)
+        if cm and cm.group(2) != "-done":
+            nb = 0
+            for on in _OPERAND_RE.findall(cm.group(3)):
+                if on in shapes and len(shapes[on]) == 1:
+                    nb += _shapes_bytes(shapes[on])
+            if nb == 0:
+                nb = _shapes_bytes(out_shapes)
+            comp["colls"].append((cm.group(1), nb))
+
+        # HBM traffic at kernel granularity (non-fused computations).
+        # Tuple-shaped operands (e.g. the whole while-carry tuple fed to
+        # a fusion) are aliasing containers, not traffic: real reads go
+        # through get-tuple-element names, which carry element shapes.
+        if not comp["fused"] and op and op not in _FREE_OPS \
+                and op != "while" and op != "conditional":
+            nb = _shapes_bytes(out_shapes)
+            arg_str = rhs.split("(", 1)[1] if "(" in rhs else ""
+            arg_str = arg_str.split(")")[0]
+            for on in _OPERAND_RE.findall(arg_str):
+                if on in shapes and len(shapes[on]) == 1:
+                    nb += _shapes_bytes(shapes[on])
+            comp["mem"] += nb
+
+    # ---------------- pass 2: multipliers via loop trip counts
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        if not cond or not cond["consts"]:
+            return 1
+        return max(cond["consts"])
+
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 60 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        comp = comps[name]
+        for callee in comp["calls"]:
+            visit(callee, m, depth + 1)
+        for cond, body in comp["whiles"]:
+            t = trip_count(cond)
+            visit(cond, m * t, depth + 1)
+            visit(body, m * t, depth + 1)
+
+    if entry and entry in comps:
+        visit(entry, 1.0)
+    else:
+        for name in comps:
+            mult[name] = 1.0
+
+    out = HloAnalysis()
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            m = 1.0 if name == entry else 0.0
+        out.flops += m * sum(comp["dots"])
+        out.memory_bytes += m * comp["mem"]
+        out.n_while_loops += len(comp["whiles"])
+        for op, nb in comp["colls"]:
+            out.collective_bytes += m * nb
+            out.collective_count += int(m)
+            ent = out.collectives_by_type.setdefault(
+                op, {"bytes": 0.0, "count": 0})
+            ent["bytes"] += m * nb
+            ent["count"] += int(m)
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes: float) -> dict:
+    compute = flops_per_device / PEAK_FLOPS_BF16
+    memory = bytes_per_device / HBM_BW
+    collective = collective_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, *,
+                training: bool) -> float:
+    """MODEL_FLOPS = 6·N·D train (fwd+bwd), 2·N·D inference."""
+    mult = 6.0 if training else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,205 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Right-aligned template rules keyed on tree-path substrings: a template
+like (DATA, MODEL) applies to the trailing dims of the leaf, leading
+dims (e.g. the lax.scan group dim) replicate.  Dims that do not divide
+the mesh axis fall back to replication (logged) — this is how e.g.
+arctic's 56 heads or kv_heads < 16 degrade gracefully (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+log = logging.getLogger("repro.sharding")
+
+DATA, MODEL = "data", "model"
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def _fits(dim: int, mesh: Mesh, axis: Optional[str]) -> Optional[str]:
+    if axis is None:
+        return None
+    size = mesh.shape[axis]
+    if dim % size == 0:
+        return axis
+    log.debug("dim %d not divisible by %s=%d -> replicated",
+              dim, axis, size)
+    return None
+
+
+def _apply_template(shape: tuple, template: tuple, mesh: Mesh,
+                    align: str = "right") -> P:
+    """Template entries map to trailing (right) or leading (left) dims."""
+    spec: list = [None] * len(shape)
+    t = list(template)
+    if align == "right":
+        for i, ax in enumerate(reversed(t)):
+            d = len(shape) - 1 - i
+            if d >= 0:
+                spec[d] = _fits(shape[d], mesh, ax)
+    else:
+        for d, ax in enumerate(t):
+            if d < len(shape):
+                spec[d] = _fits(shape[d], mesh, ax)
+    return P(*spec)
+
+
+# MoE expert-weight inner sharding:
+#   'dmodel' (baseline/ZeRO): w_gate/w_up (E, d@data, ff) — the d_model
+#       contraction dim is sharded, so SPMD must all-gather expert
+#       weights before every routed matmul (per token-group scan step!)
+#   'dff' (§Perf variant): (E, d, ff@data) — contraction dim whole, the
+#       sharded dim flows through the expert hidden; no weight gather.
+MOE_INNER = "dmodel"
+
+
+def set_moe_inner_shard(mode: str) -> None:
+    global MOE_INNER
+    assert mode in ("dmodel", "dff")
+    globals()["MOE_INNER"] = mode
+
+
+def _param_rules():
+    up_tmpl = ((MODEL, DATA, None) if MOE_INNER == "dmodel"
+               else (MODEL, None, DATA))
+    return [
+        ("moe/w_gate", up_tmpl, "left_skip_scan"),
+        ("moe/w_up", up_tmpl, "left_skip_scan"),
+        ("moe/w_down", (MODEL, DATA, None), "left_skip_scan"),
+        ("moe/router", (DATA, None), "right"),
+        ("embed/table", (MODEL, DATA), "right"),
+        ("lm_head", (DATA, MODEL), "right"),
+        ("conv_w", (None, MODEL), "right"),
+        ("lam", (MODEL,), "right"),
+    ]
+
+
+def param_spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    if len(shape) == 0:
+        return P()
+    for sub, template, align in _param_rules():
+        if sub in path:
+            if align == "left_skip_scan":
+                # expert weights: (E, din, dout) or (G, E, din, dout)
+                offset = len(shape) - 3
+                spec = [None] * len(shape)
+                for j, ax in enumerate(template):
+                    d = offset + j
+                    spec[d] = _fits(shape[d], mesh, ax)
+                return P(*spec)
+            return _apply_template(shape, template, mesh, align)
+    if len(shape) == 1:
+        return P(None)
+    # generic matrix: in-dim -> data (ZeRO), out-dim -> model
+    return _apply_template(shape, (DATA, MODEL), mesh)
+
+
+def param_shardings(param_shapes: Any, mesh: Mesh) -> Any:
+    """ShapeDtypeStruct tree -> NamedSharding tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec_for(_path_str(path), tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batches & caches
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: tuple, mesh: Mesh) -> P:
+    """Leading dim = global batch -> (pod,)data when divisible."""
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if len(shape) == 0:
+        return P()
+    if shape[0] % total == 0 and shape[0] > 0:
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, batch_spec(tuple(l.shape), mesh)),
+        batch_shapes)
+
+
+_CACHE_RULES = [
+    # (leaf name, template) right-aligned
+    ("k", (None, MODEL, None, None)),      # (B, slots, KV, hd)
+    ("v", (None, MODEL, None, None)),
+    ("ckv", (None, MODEL, None)),          # (B, slots, r)
+    ("krope", (None, MODEL, None)),
+    ("conv", (None, None, MODEL)),         # (B, cw-1, w)
+    ("h", (None, MODEL)),                  # (B, w)
+    ("C", (None, None, None, None)),       # mlstm matrix memory
+    ("n", (None, None, None)),
+    ("m", (None, None)),
+    ("c", (None, MODEL)),                  # slstm
+    ("pos", ()),
+]
+
+
+def cache_spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    name = path.rsplit("/", 1)[-1]
+    for leaf_name, template in _CACHE_RULES:
+        if name == leaf_name:
+            spec = list(_apply_template(shape, template, mesh))
+            # batch dim: right-aligned template leaves leading dims None;
+            # shard the batch dim (first of the template window) on data
+            boff = len(shape) - len(template)
+            if len(template) and boff >= 0:
+                axes = batch_axes(mesh)
+                total = int(np.prod([mesh.shape[a] for a in axes]))
+                if shape[boff] % max(total, 1) == 0:
+                    spec[boff] = axes if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = cache_spec_for(_path_str(path), tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_shardings(opt_shapes: Any, mesh: Mesh, params_template: Any
+                  ) -> Any:
+    """Optimizer slots mirror the parameter tree's specs; step scalar
+    replicates.  Works because slots are tree_map images of params."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        if leaf.ndim == 0:
+            out.append(replicated(mesh))
+        else:
+            out.append(NamedSharding(
+                mesh, param_spec_for(p, tuple(leaf.shape), mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)

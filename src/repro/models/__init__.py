@@ -1,0 +1,6 @@
+"""Model zoo: unified-config transformer family + paper CNN."""
+from . import attention, cnn, layers, moe, ssm, transformer
+from .config import MLAConfig, ModelConfig, MoEConfig
+
+__all__ = ["attention", "cnn", "layers", "moe", "ssm", "transformer",
+           "MLAConfig", "ModelConfig", "MoEConfig"]

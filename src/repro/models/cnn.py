@@ -1,0 +1,113 @@
+"""The paper's local model (§IV-A.1): a 6-conv-layer CNN with batch
+normalization and max pooling, for 10-class 32x32x3 image
+classification.  Functional init/apply with explicit BN state — the BN
+running statistics travel inside the FedNC packets exactly like
+weights (they are part of w_k)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHANNELS = (32, 32, 64, 64, 128, 128)
+
+
+def init_cnn(key, *, num_classes: int = 10, in_channels: int = 3,
+             image_size: int = 32, dtype=jnp.float32) -> dict:
+    params: dict = {}
+    c_in = in_channels
+    ks = jax.random.split(key, len(CHANNELS) + 1)
+    for i, c_out in enumerate(CHANNELS):
+        fan_in = 3 * 3 * c_in
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(ks[i], (3, 3, c_in, c_out), jnp.float32)
+                  * np.sqrt(2.0 / fan_in)).astype(dtype),
+            "b": jnp.zeros((c_out,), dtype),
+            "bn_scale": jnp.ones((c_out,), dtype),
+            "bn_bias": jnp.zeros((c_out,), dtype),
+            # BN running stats live in params so FedNC ships them too
+            "bn_mean": jnp.zeros((c_out,), jnp.float32),
+            "bn_var": jnp.ones((c_out,), jnp.float32),
+        }
+        c_in = c_out
+    # 3 maxpools of stride 2: 32 -> 16 -> 8 -> 4
+    feat = (image_size // 8) ** 2 * CHANNELS[-1]
+    params["fc"] = {
+        "w": (jax.random.normal(ks[-1], (feat, num_classes), jnp.float32)
+              / np.sqrt(feat)).astype(dtype),
+        "b": jnp.zeros((num_classes,), dtype),
+    }
+    return params
+
+
+def _conv_bn(p: dict, x: jnp.ndarray, train: bool, momentum: float = 0.9
+             ) -> tuple[jnp.ndarray, dict]:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y + p["b"]
+    if train:
+        mu = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+        new_p = dict(p)
+        new_p["bn_mean"] = momentum * p["bn_mean"] + (1 - momentum) * mu
+        new_p["bn_var"] = momentum * p["bn_var"] + (1 - momentum) * var
+    else:
+        mu, var = p["bn_mean"], p["bn_var"]
+        new_p = p
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["bn_scale"] + p["bn_bias"]
+    return jax.nn.relu(y), new_p
+
+
+def _maxpool(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply_cnn(params: dict, x: jnp.ndarray, *, train: bool = False
+              ) -> tuple[jnp.ndarray, dict]:
+    """x: (B, H, W, C) -> (logits, updated_params_with_bn_stats)."""
+    new_params = dict(params)
+    for i in range(len(CHANNELS)):
+        x, new_params[f"conv{i}"] = _conv_bn(params[f"conv{i}"], x, train)
+        if i % 2 == 1:
+            x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_params
+
+
+def cnn_loss(params: dict, batch: tuple, *, train: bool = True):
+    """Cross-entropy loss; aux = updated params (BN stats)."""
+    x, y = batch
+    logits, new_params = apply_cnn(params, x, train=train)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return loss, new_params
+
+
+def merge_bn_stats(params: dict, new_params: dict) -> dict:
+    """Carry BN running statistics from a train-mode apply back into the
+    parameter tree (LocalTrainer.state_merge hook)."""
+    out = dict(params)
+    for i in range(len(CHANNELS)):
+        conv = dict(out[f"conv{i}"])
+        conv["bn_mean"] = new_params[f"conv{i}"]["bn_mean"]
+        conv["bn_var"] = new_params[f"conv{i}"]["bn_var"]
+        out[f"conv{i}"] = conv
+    return out
+
+
+def cnn_accuracy(params: dict, images, labels, batch: int = 512) -> float:
+    """Eval accuracy (running BN stats)."""
+    correct = 0
+    n = len(labels)
+    for i in range(0, n, batch):
+        logits, _ = apply_cnn(params, jnp.asarray(images[i:i + batch]),
+                              train=False)
+        pred = jnp.argmax(logits, axis=-1)
+        correct += int((pred == jnp.asarray(labels[i:i + batch])).sum())
+    return correct / n

@@ -1,0 +1,111 @@
+"""Shared neural building blocks (functional init/apply style).
+
+Parameters are plain nested dicts of jnp arrays so they flow through
+FedNC packetization, the checkpointing layer, and pjit sharding rules
+without adapters.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: Optional[float] = None, dtype=jnp.bfloat16) -> dict:
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.bfloat16) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: dict, x: jnp.ndarray, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str,
+             dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, d_model, dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d_model, d_ff, dtype=dtype)
+        p["up"] = dense_init(k3, d_model, d_ff, dtype=dtype)
+    else:  # gelu
+        p["up"] = dense_init(k1, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense_apply(p["up"], x))
+    else:
+        raise ValueError(act)
+    return dense_apply(p["down"], h)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_apply(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,340 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM
+(xLSTM) — each with a parallel train/prefill path and an O(1)-per-token
+decode path carrying explicit recurrent state.
+
+TPU notes: the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t is
+lowered with `jax.lax.associative_scan` (log-depth, mapped onto the
+VPU); mLSTM's train path uses its quadratic parallel form (attention-
+like, MXU-friendly) with log-space gate stabilization; sLSTM is
+inherently sequential (its normalizer/max-state is non-associative) and
+uses `lax.scan` — that cost is intrinsic to the architecture, not an
+implementation artifact.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_apply, dense_init, norm_apply, norm_init
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.resolved_lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ)^(8r) spreads over (0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 3.0, 8.0)
+    return {
+        "w_in": dense_init(ks[1], d, w, dtype=cfg.dtype),
+        "w_gate": dense_init(ks[2], d, w, dtype=cfg.dtype),   # GeGLU branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w),
+                                     jnp.float32) * 0.1).astype(cfg.dtype),
+        "lam": lam,
+        "w_a": dense_init(ks[4], w, w, dtype=cfg.dtype),      # recurrence gate
+        "w_x": dense_init(ks[5], w, w, dtype=cfg.dtype),      # input gate
+        "w_out": dense_init(jax.random.fold_in(key, 9), w, d,
+                            dtype=cfg.dtype),
+    }
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+_C_RGLRU = 8.0
+
+
+def _rglru_gates(p: dict, u: jnp.ndarray):
+    """u: (..., w) post-conv branch input -> (a, bx) gate terms."""
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_x"], u).astype(jnp.float32))
+    log_a = -_C_RGLRU * r * jax.nn.softplus(p["lam"])     # log a_t < 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * i * u.astype(jnp.float32)
+    return a, bx
+
+
+def apply_rglru(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[dict] = None):
+    """x: (B, S, d) -> (y, new_state).  state!=None & S==1: decode."""
+    B, S, d = x.shape
+    u = dense_apply(p["w_in"], x)                     # (B, S, w)
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x))   # GeGLU output gate
+
+    cw = cfg.conv_width
+    if state is None or S > 1:
+        # causal depthwise conv over time
+        upad = jnp.pad(u.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
+        conv = sum(upad[:, i: i + S] * p["conv_w"][i].astype(jnp.float32)
+                   for i in range(cw))
+        a, bx = _rglru_gates(p, conv.astype(x.dtype))
+        # h_t = a_t h_{t-1} + b_t via associative scan over time
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        aT = jnp.swapaxes(a, 0, 1)                    # (S, B, w)
+        bT = jnp.swapaxes(bx, 0, 1)
+        _, hT = jax.lax.associative_scan(combine, (aT, bT), axis=0)
+        h = jnp.swapaxes(hT, 0, 1)                    # (B, S, w)
+        new_state = None
+        if state is not None:                          # prefill
+            new_state = {
+                "h": h[:, -1],
+                "conv": upad[:, S: S + cw - 1]
+                if S >= cw - 1 else jnp.zeros_like(state["conv"]),
+            }
+    else:
+        # decode: one step
+        hist = jnp.concatenate(
+            [state["conv"], u.astype(jnp.float32)], axis=1)  # (B, cw, w)
+        conv = sum(hist[:, i] * p["conv_w"][i].astype(jnp.float32)
+                   for i in range(cw))[:, None]              # (B, 1, w)
+        a, bx = _rglru_gates(p, conv.astype(x.dtype))
+        h = a * state["h"][:, None] + bx                     # (B, 1, w)
+        new_state = {"h": h[:, 0], "conv": hist[:, 1:]}
+
+    y = dense_apply(p["w_out"], (h.astype(x.dtype) * gate))
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory, exponential gating
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, proj_factor: float = 2.0) -> dict:
+    d = cfg.d_model
+    di = int(d * proj_factor)
+    H = cfg.num_heads
+    assert di % H == 0
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dtype=cfg.dtype),
+        "wq": dense_init(ks[1], di, di, dtype=cfg.dtype),
+        "wk": dense_init(ks[2], di, di, dtype=cfg.dtype),
+        "wv": dense_init(ks[3], di, di, dtype=cfg.dtype),
+        "w_i": dense_init(ks[4], di, H, dtype=cfg.dtype),
+        "w_f": dense_init(ks[5], di, H, dtype=cfg.dtype),
+        "norm": norm_init(di, "rmsnorm", cfg.dtype),
+        "w_down": dense_init(ks[6], di, d, dtype=cfg.dtype),
+    }
+
+
+def make_mlstm_state(cfg: ModelConfig, batch: int,
+                     proj_factor: float = 2.0) -> dict:
+    di = int(cfg.d_model * proj_factor)
+    H = cfg.num_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def apply_mlstm(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[dict] = None,
+                proj_factor: float = 2.0):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    up = dense_apply(p["w_up"], x)
+    a, g = jnp.split(up, 2, axis=-1)                 # (B,S,di) each
+    di = a.shape[-1]
+    dh = di // H
+
+    q = dense_apply(p["wq"], a).reshape(B, S, H, dh)
+    k = dense_apply(p["wk"], a).reshape(B, S, H, dh) / np.sqrt(dh)
+    v = dense_apply(p["wv"], a).reshape(B, S, H, dh)
+    log_i = (dense_apply(p["w_i"], a).astype(jnp.float32)
+             .transpose(0, 2, 1))                    # (B,H,S) input gate
+    log_f = jax.nn.log_sigmoid(
+        dense_apply(p["w_f"], a).astype(jnp.float32)).transpose(0, 2, 1)
+
+    if state is None or S > 1:
+        st0 = state or make_mlstm_state_from(B, H, dh)
+        h, end_state = _mlstm_chunkwise(q, k, v, log_i, log_f, st0)
+        new_state = end_state if state is not None else None
+    else:
+        # recurrent decode step
+        C, n, m_prev = state["C"], state["n"], state["m"]
+        li = log_i[:, :, 0]
+        lf = log_f[:, :, 0]
+        m_new = jnp.maximum(lf + m_prev, li)         # (B,H)
+        fprime = jnp.exp(lf + m_prev - m_new)
+        iprime = jnp.exp(li - m_new)
+        kh = k[:, 0].astype(jnp.float32)             # (B,H,dh)
+        vh = v[:, 0].astype(jnp.float32)
+        qh = q[:, 0].astype(jnp.float32)
+        C = fprime[..., None, None] * C + \
+            iprime[..., None, None] * jnp.einsum("bhd,bhe->bhde", kh, vh)
+        n = fprime[..., None] * n + iprime[..., None] * kh
+        num = jnp.einsum("bhde,bhd->bhe", C, qh)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh)),
+                          jnp.exp(-m_new)) + 1e-6
+        h = (num / den[..., None])[:, None]          # (B,1,H,dh)
+        new_state = {"C": C, "n": n, "m": m_new}
+
+    hflat = h.reshape(B, S, di).astype(x.dtype)
+    out = norm_apply(p["norm"], hflat) * jax.nn.silu(g)
+    return dense_apply(p["w_down"], out), new_state
+
+
+def make_mlstm_state_from(B: int, H: int, dh: int) -> dict:
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state: dict,
+                     chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM (linear in S, quadratic only within a
+    chunk).  q/k/v: (B,S,H,dh); log_i/log_f: (B,H,S).
+    Returns (h: (B,S,H,dh) float32, end_state)."""
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)))
+        # padded steps must not contribute: f=1 (log 0), i -> -inf
+        log_i = log_i.at[:, :, S:].set(-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    G = Sp // L
+
+    # reshape to (G, B, L, H, dh) / gates (G, B, H, L)
+    qs = q.reshape(B, G, L, H, dh).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, G, L, H, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, G, L, H, dh).transpose(1, 0, 2, 3, 4)
+    lis = log_i.reshape(B, H, G, L).transpose(2, 0, 1, 3)
+    lfs = log_f.reshape(B, H, G, L).transpose(2, 0, 1, 3)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, xs):
+        C, n, m_run = carry                    # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, li, lf = xs
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=-1)            # (B,H,L) in-chunk Σ log f
+        # intra-chunk decay: D[t,s] = F_t - F_s + li_s (s <= t)
+        Dl = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        Dl = jnp.where(mask[None, None], Dl, -jnp.inf)
+        intra_max = jnp.max(Dl, axis=-1)       # (B,H,L)
+        inter_log = F + m_run[..., None]       # carry-in weight per t
+        m_t = jnp.maximum(intra_max, inter_log)            # (B,H,L)
+        D = jnp.exp(Dl - m_t[..., None])                   # (B,H,L,L)
+        w_inter = jnp.exp(inter_log - m_t)                 # (B,H,L)
+
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) * D
+        num = jnp.einsum("bhqk,bkhd->bqhd", scores, vc) + \
+            jnp.einsum("bhde,bqhd,bhq->bqhe", C, qc, w_inter)
+        den = scores.sum(-1) + \
+            jnp.einsum("bhd,bqhd,bhq->bhq", n, qc, w_inter)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t)) + 1e-6
+        h = num / den.transpose(0, 2, 1)[..., None]        # (B,L,H,dh)
+
+        # end-of-chunk state update
+        Ftot = F[..., -1]                                   # (B,H)
+        m_new = jnp.maximum(Ftot + m_run,
+                            jnp.max(Ftot[..., None] - F + li, axis=-1))
+        w_old = jnp.exp(Ftot + m_run - m_new)               # (B,H)
+        w_s = jnp.exp(Ftot[..., None] - F + li - m_new[..., None])
+        C = w_old[..., None, None] * C + \
+            jnp.einsum("bkhd,bkhe,bhk->bhde", kc, vc, w_s)
+        n = w_old[..., None] * n + jnp.einsum("bkhd,bhk->bhd", kc, w_s)
+        return (C, n, m_new), h
+
+    carry0 = (state["C"], state["n"], state["m"])
+    (C, n, m), hs = jax.lax.scan(body, carry0, (qs, ks_, vs, lis, lfs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dh)[:, :S]
+    return h, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar memory, exponential gating, recurrent weights
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, proj_factor: float = 4.0 / 3.0
+               ) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    dff = int(d * proj_factor)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype=cfg.dtype),   # i,f,z,o
+        "r_gates": dense_init(ks[1], d, 4 * d, scale=1.0 / np.sqrt(d),
+                              dtype=cfg.dtype),                    # recurrent
+        "norm": norm_init(d, "rmsnorm", cfg.dtype),
+        "w_up": dense_init(ks[2], d, dff, dtype=cfg.dtype),
+        "w_down": dense_init(ks[3], dff, d, dtype=cfg.dtype),
+    }
+
+
+def make_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": z}
+
+
+def _slstm_step(p, carry, xt):
+    """One sLSTM timestep.  xt: (B, d)."""
+    c, n, m, h = carry
+    gates = (dense_apply(p["w_gates"], xt).astype(jnp.float32)
+             + dense_apply(p["r_gates"], h.astype(xt.dtype))
+             .astype(jnp.float32))
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    ip = jnp.exp(gi - m_new)
+    fp = jnp.exp(log_f + m - m_new)
+    c = fp * c + ip * jnp.tanh(gz)
+    n = fp * n + ip
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h)
+
+
+def apply_slstm(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[dict] = None):
+    """x: (B, S, d) -> (y, new_state).  Sequential over S by design."""
+    B, S, d = x.shape
+    st = state or make_slstm_state(cfg, B)
+    carry0 = (st["c"], st["n"], st["m"], st["h"])
+
+    if S == 1:
+        carry = _slstm_step(p, carry0, x[:, 0])
+        hs = carry[3][:, None]
+    else:
+        def body(carry, xt):
+            carry = _slstm_step(p, carry, xt)
+            return carry, carry[3]
+        carry, hsT = jax.lax.scan(body, carry0, jnp.swapaxes(x, 0, 1))
+        hs = jnp.swapaxes(hsT, 0, 1)                  # (B, S, d)
+
+    new_state = {"c": carry[0], "n": carry[1], "m": carry[2],
+                 "h": carry[3]}
+    y = norm_apply(p["norm"], hs.astype(x.dtype))
+    y = dense_apply(p["w_down"], jax.nn.gelu(dense_apply(p["w_up"], y)))
+    if state is None:
+        new_state = None
+    return y, new_state

@@ -1,0 +1,445 @@
+"""Model assembly: typed block stacks, lax.scan over repeating groups,
+prefill/decode caches, encoder-decoder support, chunked LM loss.
+
+The stack layout comes from ModelConfig: `prefix_kinds` (unrolled),
+`scan_pattern` x n_groups (lax.scan over stacked params — HLO size is
+O(|pattern|), critical for 100-layer models on 512 devices), and an
+unrolled suffix for non-divisible depths (e.g. recurrentgemma 38 = 3x12
++ 2).
+
+Modes:
+  train    — full sequence, no cache, remat'd scan body
+  prefill  — full sequence, fills decode caches, returns last logits
+  decode   — one token through ring-buffer/recurrent caches
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .config import ModelConfig
+from .layers import (dense_apply, dense_init, embed_apply, embed_init,
+                     mlp_apply, mlp_init, norm_apply, norm_init)
+
+LOSS_CHUNK = 512    # seq positions per LM-head chunk (bounds logits mem)
+
+
+# ---------------------------------------------------------------------------
+# block init
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("dense", "local", "enc"):
+        return {
+            "ln1": norm_init(d, cfg.norm, cfg.dtype),
+            "attn": attn.init_self_attention(ks[0], cfg),
+            "ln2": norm_init(d, cfg.norm, cfg.dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, cfg.dtype),
+        }
+    if kind in ("moe", "moe_residual"):
+        return {
+            "ln1": norm_init(d, cfg.norm, cfg.dtype),
+            "attn": attn.init_self_attention(ks[0], cfg),
+            "ln2": norm_init(d, cfg.norm, cfg.dtype),
+            "moe": moe_mod.init_moe(ks[1], cfg),
+        }
+    if kind == "xattn":
+        return {
+            "ln1": norm_init(d, cfg.norm, cfg.dtype),
+            "xattn": attn.init_cross_attention(ks[0], cfg),
+            "gate_attn": jnp.zeros((), cfg.dtype),
+            "ln2": norm_init(d, cfg.norm, cfg.dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, cfg.dtype),
+            "gate_mlp": jnp.zeros((), cfg.dtype),
+        }
+    if kind == "dec":
+        return {
+            "ln1": norm_init(d, cfg.norm, cfg.dtype),
+            "attn": attn.init_self_attention(ks[0], cfg),
+            "ln2": norm_init(d, cfg.norm, cfg.dtype),
+            "xattn": attn.init_cross_attention(ks[1], cfg),
+            "ln3": norm_init(d, cfg.norm, cfg.dtype),
+            "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.act, cfg.dtype),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": norm_init(d, cfg.norm, cfg.dtype),
+            "rglru": ssm.init_rglru(ks[0], cfg),
+            "ln2": norm_init(d, cfg.norm, cfg.dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, cfg.dtype),
+        }
+    if kind == "mlstm":
+        return {"ln": norm_init(d, cfg.norm, cfg.dtype),
+                "core": ssm.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln": norm_init(d, cfg.norm, cfg.dtype),
+                "core": ssm.init_slstm(ks[0], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def make_block_cache(kind: str, cfg: ModelConfig, batch: int,
+                     cache_len: int, window: Optional[int],
+                     mem_len: int = 0):
+    """Empty decode cache for one block (None for cacheless kinds)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kind in ("dense", "moe", "moe_residual"):
+        return attn.make_kv_cache(cfg, batch, cache_len, window)
+    if kind == "local":
+        return attn.make_kv_cache(cfg, batch, cache_len,
+                                  window or cfg.window)
+    if kind == "xattn":
+        return {"k": jnp.zeros((batch, mem_len, KV, hd), cfg.dtype),
+                "v": jnp.zeros((batch, mem_len, KV, hd), cfg.dtype)}
+    if kind == "dec":
+        return {
+            "self": attn.make_kv_cache(cfg, batch, cache_len, window),
+            "cross": {"k": jnp.zeros((batch, mem_len, KV, hd), cfg.dtype),
+                      "v": jnp.zeros((batch, mem_len, KV, hd), cfg.dtype)},
+        }
+    if kind == "rglru":
+        return ssm.make_rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return ssm.make_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return ssm.make_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+def apply_block(kind: str, p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                cache=None, memory: Optional[jnp.ndarray] = None,
+                window: Optional[int] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "local", "moe", "moe_residual"):
+        win = window or cfg.window   # explicit override > config window
+        h, new_c = attn.apply_self_attention(
+            p["attn"], norm_apply(p["ln1"], x, cfg.norm), cfg,
+            window=win, cache=cache)
+        x = x + h
+        h2 = norm_apply(p["ln2"], x, cfg.norm)
+        if kind in ("moe", "moe_residual"):
+            y, aux = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = mlp_apply(p["mlp"], h2, cfg.act)
+        return x + y, new_c, aux
+
+    if kind == "enc":   # bidirectional self-attention (no mask)
+        h, _ = attn.apply_self_attention(
+            p["attn"], norm_apply(p["ln1"], x, cfg.norm), cfg,
+            window=None, cache=None)
+        x = x + h
+        y = mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg.norm), cfg.act)
+        return x + y, None, aux
+
+    if kind == "xattn":
+        if cache is not None and memory is None:
+            mem_kv = cache
+            new_c = cache
+        else:
+            mem_kv = attn.precompute_cross_kv(p["xattn"], memory, cfg)
+            new_c = mem_kv if cache is not None else None
+        h = attn.apply_cross_attention(
+            p["xattn"], norm_apply(p["ln1"], x, cfg.norm), cfg,
+            mem_kv=mem_kv)
+        x = x + jnp.tanh(p["gate_attn"]) * h
+        y = mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg.norm), cfg.act)
+        return x + jnp.tanh(p["gate_mlp"]) * y, new_c, aux
+
+    if kind == "dec":
+        c_self = cache["self"] if cache is not None else None
+        h, new_self = attn.apply_self_attention(
+            p["attn"], norm_apply(p["ln1"], x, cfg.norm), cfg,
+            window=window, cache=c_self)
+        x = x + h
+        if cache is not None and memory is None:
+            mem_kv = cache["cross"]
+            new_cross = cache["cross"]
+        else:
+            mem_kv = attn.precompute_cross_kv(p["xattn"], memory, cfg)
+            new_cross = mem_kv if cache is not None else None
+        h = attn.apply_cross_attention(
+            p["xattn"], norm_apply(p["ln2"], x, cfg.norm), cfg,
+            mem_kv=mem_kv)
+        x = x + h
+        y = mlp_apply(p["mlp"], norm_apply(p["ln3"], x, cfg.norm), cfg.act)
+        new_c = None
+        if cache is not None:
+            new_c = {"self": new_self, "cross": new_cross}
+        return x + y, new_c, aux
+
+    if kind == "rglru":
+        h, new_c = ssm.apply_rglru(
+            p["rglru"], norm_apply(p["ln1"], x, cfg.norm), cfg, state=cache)
+        x = x + h
+        y = mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg.norm), cfg.act)
+        return x + y, new_c, aux
+
+    if kind == "mlstm":
+        h, new_c = ssm.apply_mlstm(
+            p["core"], norm_apply(p["ln"], x, cfg.norm), cfg, state=cache)
+        return x + h, new_c, aux
+
+    if kind == "slstm":
+        h, new_c = ssm.apply_slstm(
+            p["core"], norm_apply(p["ln"], x, cfg.norm), cfg, state=cache)
+        return x + h, new_c, aux
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def _group_init(key, pattern: tuple, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{j}": init_block(ks[j], kind, cfg)
+            for j, kind in enumerate(pattern)}
+
+
+def init_decoder_stack(key, cfg: ModelConfig) -> dict:
+    prefix, pattern, suffix = cfg.prefix_kinds, cfg.scan_pattern, \
+        cfg.decoder_layer_kinds()[2]
+    G = cfg.n_scan_groups()
+    kp, ksc, ksu = jax.random.split(key, 3)
+    out: dict = {}
+    out["prefix"] = [init_block(jax.random.fold_in(kp, i), k, cfg)
+                     for i, k in enumerate(prefix)]
+    if G > 0:
+        groups = [_group_init(jax.random.fold_in(ksc, g), pattern, cfg)
+                  for g in range(G)]
+        out["scan"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *groups)
+    else:
+        out["scan"] = {}
+    out["suffix"] = [init_block(jax.random.fold_in(ksu, i), k, cfg)
+                     for i, k in enumerate(suffix)]
+    return out
+
+
+def make_decoder_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                       window: Optional[int], mem_len: int = 0) -> dict:
+    prefix, pattern, suffix = cfg.prefix_kinds, cfg.scan_pattern, \
+        cfg.decoder_layer_kinds()[2]
+    G = cfg.n_scan_groups()
+
+    def one(kind):
+        return make_block_cache(kind, cfg, batch, cache_len, window,
+                                mem_len)
+
+    cache: dict = {
+        "prefix": [one(k) for k in prefix],
+        "suffix": [one(k) for k in suffix],
+    }
+    if G > 0:
+        group = {f"b{j}": one(k) for j, k in enumerate(pattern)}
+        cache["scan"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape).copy(),
+            group)
+    else:
+        cache["scan"] = {}
+    return cache
+
+
+def apply_decoder_stack(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                        cache: Optional[dict] = None,
+                        memory: Optional[jnp.ndarray] = None,
+                        window: Optional[int] = None,
+                        remat: bool = False):
+    """Returns (x, new_cache, aux_total)."""
+    prefix, pattern, suffix = cfg.prefix_kinds, cfg.scan_pattern, \
+        cfg.decoder_layer_kinds()[2]
+    G = cfg.n_scan_groups()
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {"prefix": [], "suffix": [], "scan": {}}
+
+    for i, kind in enumerate(prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = apply_block(kind, params["prefix"][i], x, cfg,
+                                 cache=c, memory=memory, window=window)
+        new_cache["prefix"].append(nc)
+        aux_total += aux
+
+    if G > 0:
+        has_cache = cache is not None
+
+        def body(carry, xs):
+            xx = carry
+            if has_cache:
+                p_g, c_g = xs
+            else:
+                p_g, c_g = xs, None
+            new_cs = {}
+            aux_g = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(pattern):
+                cj = c_g[f"b{j}"] if has_cache else None
+                xx, nc, aux = apply_block(kind, p_g[f"b{j}"], xx, cfg,
+                                          cache=cj, memory=memory,
+                                          window=window)
+                new_cs[f"b{j}"] = nc if has_cache else jnp.zeros(())
+                aux_g = aux_g + aux
+            return xx, (new_cs, aux_g)
+
+        if remat:
+            body = jax.checkpoint(body)
+        xs = (params["scan"], cache["scan"]) if has_cache \
+            else params["scan"]
+        x, (scan_caches, auxs) = jax.lax.scan(body, x, xs)
+        if has_cache:
+            new_cache["scan"] = scan_caches
+        aux_total += jnp.sum(auxs)
+
+    for i, kind in enumerate(suffix):
+        c = cache["suffix"][i] if cache is not None else None
+        x, nc, aux = apply_block(kind, params["suffix"][i], x, cfg,
+                                 cache=c, memory=memory, window=window)
+        new_cache["suffix"].append(nc)
+        aux_total += aux
+
+    if cache is None:
+        new_cache = None
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# full language model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    p: dict = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                            cfg.dtype),
+        "decoder": init_decoder_stack(ks[1], cfg),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                  dtype=cfg.dtype)
+    if cfg.encoder_layers > 0:
+        enc_cfg = cfg.with_overrides(
+            num_layers=cfg.encoder_layers, scan_pattern=("enc",),
+            prefix_kinds=(), moe=None, mla=None)
+        p["encoder"] = init_decoder_stack(ks[3], enc_cfg)
+        p["enc_norm"] = norm_init(cfg.d_model, cfg.norm, cfg.dtype)
+    return p
+
+
+def run_encoder(params: dict, memory_emb: jnp.ndarray, cfg: ModelConfig
+                ) -> jnp.ndarray:
+    """Bidirectional encoder over (stub-)frontend embeddings."""
+    enc_cfg = cfg.with_overrides(
+        num_layers=cfg.encoder_layers, scan_pattern=("enc",),
+        prefix_kinds=(), moe=None, mla=None)
+    x, _, _ = apply_decoder_stack(params["encoder"], memory_emb, enc_cfg)
+    return norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def _lm_logits(params: dict, h: jnp.ndarray, cfg: ModelConfig
+               ) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["table"].T
+    return dense_apply(params["lm_head"], h)
+
+
+def _memory_states(params, batch, cfg):
+    mem = batch.get("memory")
+    if mem is None:
+        return None
+    if cfg.encoder_layers > 0:        # audio enc-dec: run real encoder
+        return run_encoder(params, mem, cfg)
+    return mem                        # VLM: projector output, used as-is
+
+
+def forward_hidden(params: dict, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                   memory=None, window=None, remat=False):
+    x = embed_apply(params["embed"], tokens)
+    x, _, aux = apply_decoder_stack(params["decoder"], x, cfg,
+                                    memory=memory, window=window,
+                                    remat=remat)
+    return norm_apply(params["final_norm"], x, cfg.norm), aux
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig, *,
+            window: Optional[int] = None, remat: bool = True):
+    """Causal LM loss; LM head applied in seq chunks so (B,S,V) logits
+    never materialize (V up to 256k)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    memory = _memory_states(params, batch, cfg)
+    h, aux = forward_hidden(params, tokens, cfg, memory=memory,
+                            window=window, remat=remat)
+    B, S, d = h.shape
+    chunk = min(LOSS_CHUNK, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-1)
+    n_chunks = h.shape[1] // chunk
+    hs = h.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, lc = xs
+        logits = _lm_logits(params, hc, cfg).astype(jnp.float32)
+        # mask out vocab padding columns
+        vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(vmask[None, None], logits, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lc >= 0
+        lsafe = jnp.maximum(lc, 0)
+        nll = -jnp.take_along_axis(logp, lsafe[..., None], axis=-1)[..., 0]
+        loss_sum = jnp.sum(nll * valid)
+        count = jnp.sum(valid)
+        return carry, (loss_sum, count)
+
+    _, (sums, counts) = jax.lax.scan(body, None, (hs, ls))
+    loss = jnp.sum(sums) / jnp.maximum(jnp.sum(counts), 1)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            cache_len: int, window: Optional[int] = None,
+            memory=None):
+    """Run the prompt, fill caches, return (last_logits, cache)."""
+    B, S = tokens.shape
+    mem_states = None
+    mem_len = 0
+    if memory is not None:
+        mem_states = (run_encoder(params, memory, cfg)
+                      if cfg.encoder_layers > 0 else memory)
+        mem_len = mem_states.shape[1]
+    cache = make_decoder_cache(cfg, B, cache_len, window, mem_len)
+    x = embed_apply(params["embed"], tokens)
+    x, cache, _ = apply_decoder_stack(params["decoder"], x, cfg,
+                                      cache=cache, memory=mem_states,
+                                      window=window)
+    h = norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    return _lm_logits(params, h, cfg), cache
+
+
+def decode_step(params: dict, token: jnp.ndarray, cache: dict,
+                cfg: ModelConfig, *, window: Optional[int] = None):
+    """One-token decode: token (B, 1) int32 -> (logits (B,1,V), cache)."""
+    x = embed_apply(params["embed"], token)
+    x, cache, _ = apply_decoder_stack(params["decoder"], x, cfg,
+                                      cache=cache, memory=None,
+                                      window=window)
+    h = norm_apply(params["final_norm"], x, cfg.norm)
+    return _lm_logits(params, h, cfg), cache

@@ -1,0 +1,10 @@
+"""Native optimizers (no optax dependency): SGD, momentum, Adam, AdamW."""
+from .base import Optimizer, OptState, apply_updates
+from .optimizers import adam, adamw, momentum, sgd
+from .schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer", "OptState", "apply_updates", "adam", "adamw",
+    "momentum", "sgd", "constant", "cosine_decay",
+    "linear_warmup_cosine",
+]

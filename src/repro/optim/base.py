@@ -1,0 +1,54 @@
+"""Optimizer interface: pure-functional (init, update) pairs.
+
+An Optimizer is a pair of closures over hyperparameters:
+    state   = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params  = apply_updates(params, updates)
+
+States are pytrees matching the parameter tree (so they shard with the
+same PartitionSpecs in the launcher), plus a scalar step counter.
+`state_dtype` lets big-model configs keep moments in bf16
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    slots: Any                 # optimizer-specific pytree (or ())
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )
+
+
+def tree_zeros_like(params: Any, dtype=None) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda l: l * scale.astype(l.dtype), tree)

@@ -1,0 +1,96 @@
+"""SGD / momentum / Adam / AdamW, schedule-aware."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, OptState, tree_zeros_like
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.int32(0), slots=())
+
+    def update(grads, state, params=None):
+        eta = _lr_at(lr, state.step)
+        upd = jax.tree_util.tree_map(
+            lambda g: (-eta * g.astype(jnp.float32)), grads)
+        return upd, OptState(step=state.step + 1, slots=())
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9,
+             state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.int32(0),
+                        slots=tree_zeros_like(params, state_dtype))
+
+    def update(grads, state, params=None):
+        eta = _lr_at(lr, state.step)
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: (beta * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(state_dtype),
+            state.slots, grads)
+        upd = jax.tree_util.tree_map(
+            lambda m: -eta * m.astype(jnp.float32), new_m)
+        return upd, OptState(step=state.step + 1, slots=new_m)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, state_dtype=jnp.float32) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0,
+                 state_dtype=state_dtype)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with bias correction; moments stored in `state_dtype`."""
+
+    def init(params):
+        return OptState(
+            step=jnp.int32(0),
+            slots={"m": tree_zeros_like(params, state_dtype),
+                   "v": tree_zeros_like(params, state_dtype)},
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = _lr_at(lr, state.step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_m(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(state_dtype)
+
+        def upd_v(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(state_dtype)
+
+        new_m = jax.tree_util.tree_map(upd_m, state.slots["m"], grads)
+        new_v = jax.tree_util.tree_map(upd_v, state.slots["v"], grads)
+
+        def step_fn(m, v, p):
+            mhat = m.astype(jnp.float32) / c1
+            vhat = v.astype(jnp.float32) / c2
+            u = -eta * (mhat / (jnp.sqrt(vhat) + eps)
+                        + weight_decay * p.astype(jnp.float32))
+            return u
+
+        upd = jax.tree_util.tree_map(step_fn, new_m, new_v, params)
+        return upd, OptState(step=step, slots={"m": new_m, "v": new_v})
+
+    return Optimizer(init, update)

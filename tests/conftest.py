@@ -1,0 +1,18 @@
+"""Shared test configuration.
+
+jax.clear_caches() after every module: the suite jit-compiles hundreds
+of distinct shapes (hypothesis sweeps + interpret-mode Pallas kernels);
+without clearing, the CPU-client compilation cache grows unboundedly
+and eventually corrupts/aborts the runtime mid-suite.
+
+NOTE: no XLA_FLAGS here — tests must see the real single-device view
+(the 512-device override belongs to repro.launch.dryrun ONLY).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

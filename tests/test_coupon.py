@@ -1,0 +1,45 @@
+"""Prop. 1 (coupon collector / blind box) math + simulation."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import coupon
+
+
+def test_exact_equals_harmonic():
+    for K in (1, 2, 5, 10, 50):
+        assert coupon.expected_draws_fedavg(K) == pytest.approx(
+            K * sum(1 / i for i in range(1, K + 1)))
+
+
+def test_asymptotic_matches_exact():
+    """Paper eq. 5 approximates K·H(K) to O(1/K)."""
+    for K in (10, 100, 1000):
+        exact = coupon.expected_draws_fedavg(K)
+        asym = coupon.expected_draws_fedavg_asymptotic(K)
+        assert abs(exact - asym) < 1.0 / K * 10
+
+
+def test_fednc_draws_close_to_K():
+    """FedNC needs ~K draws (O(K)), vs K ln K for FedAvg — the paper's
+    headline efficiency claim."""
+    for K in (5, 10, 20):
+        e = coupon.expected_draws_fednc(K, s=8)
+        assert K <= e < K + 0.02
+        assert coupon.expected_draws_fedavg(K) > e * math.log(K) * 0.8
+
+
+def test_simulation_matches_formula():
+    K = 8
+    sim = coupon.simulate_fedavg_draws(K, trials=400, seed=0)
+    expect = coupon.expected_draws_fedavg(K)
+    assert np.mean(sim) == pytest.approx(expect, rel=0.15)
+
+
+@pytest.mark.slow
+def test_fednc_simulation_matches_formula():
+    K = 6
+    sim = coupon.simulate_fednc_draws(K, s=8, trials=60, seed=0)
+    assert np.mean(sim) == pytest.approx(
+        coupon.expected_draws_fednc(K, 8), rel=0.1)

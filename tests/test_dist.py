@@ -1,0 +1,76 @@
+"""Mesh-level FedNC collective (core.dist): coded mean == plain mean.
+
+Runs in a subprocess with 8 forced host devices so the main pytest
+process keeps its single-device view (the dryrun-only 512-device trick
+must NOT leak into tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import dist
+
+devs = np.array(jax.devices()[:8]).reshape(8)
+mesh = Mesh(devs, ("data",))
+key = jax.random.PRNGKey(0)
+tree = {"w": jax.random.normal(key, (8, 33, 5)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (8, 7))}
+out = {}
+for mode in ("naive", "blocked", "psum"):
+    f = dist.make_fednc_mean(mesh, axis="data", mode=mode)
+    with mesh:
+        res = jax.jit(f)(tree, jax.random.PRNGKey(7))
+    err = 0.0
+    for k, v in tree.items():
+        want = jnp.broadcast_to(jnp.mean(v, 0, keepdims=True), v.shape)
+        err = max(err, float(jnp.abs(res[k] - want).max()))
+    out[mode] = err
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_fednc_mesh_mean_all_modes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    errs = json.loads(line.split(" ", 1)[1])
+    assert errs["psum"] < 1e-6
+    assert errs["naive"] < 1e-4
+    assert errs["blocked"] < 1e-4
+
+
+def test_aggregate_gradients_single_device():
+    """The pjit formulation used by train_step: all three modes return
+    the client mean (float-field decode is exact up to fp32 solve)."""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.steps import aggregate_gradients, float_inv
+    key = jax.random.PRNGKey(0)
+    K = 8
+    grads = {"a": jax.random.normal(key, (K, 13, 3)),
+             "b": jax.random.normal(jax.random.fold_in(key, 2), (K, 5))}
+    want = {k: jnp.mean(v, 0) for k, v in grads.items()}
+    for mode in ("plain", "fednc_naive", "fednc_blocked"):
+        got = aggregate_gradients(grads, jax.random.PRNGKey(3), K, mode)
+        for k in grads:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]),
+                                       rtol=5e-4, atol=5e-5)
+    # float_inv really inverts
+    A = jax.random.normal(jax.random.PRNGKey(9), (16, 16))
+    np.testing.assert_allclose(np.asarray(float_inv(A) @ A),
+                               np.eye(16), atol=1e-4)

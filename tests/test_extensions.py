@@ -1,0 +1,118 @@
+"""Beyond-baseline FedNC features: hierarchical edge mixing (paper
+§III's suggested deployment), sparse RLNC, and quantized packets
+(paper ref [22])."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fednc, hierarchy
+from repro.core.channel import ErasureChannel
+from repro.core.fednc import FedNCConfig
+from repro.core.gf import get_field, rank as gf_rank
+from repro.core.rlnc import sparse_coding_matrix
+
+
+def _clients(n, shape=(16, 3), seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [{"w": jax.random.normal(jax.random.fold_in(key, i), shape)}
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# hierarchical FedNC
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_equals_fedavg():
+    clients = _clients(6)
+    weights = [1 / 6] * 6
+    prev = clients[0]
+    res = hierarchy.hierarchical_fednc_round(
+        clients, weights, prev, FedNCConfig(s=8), jax.random.PRNGKey(0),
+        num_edges=3)
+    if res.decoded:
+        ref = fednc.fedavg_round(clients, weights, prev)
+        np.testing.assert_array_equal(
+            np.asarray(res.global_params["w"]),
+            np.asarray(ref.global_params["w"]))
+
+
+def test_hierarchical_edge_coding_matrix_is_block_structured():
+    P = get_field(8).random_elements(jax.random.PRNGKey(1), (6, 50))
+    edges = hierarchy.partition_edges(6, 2)
+    b = hierarchy.edge_encode(P, edges[0], 6, 3, FedNCConfig(s=8),
+                              jax.random.PRNGKey(2))
+    A = np.asarray(b.A)
+    # columns outside the edge's clients are zero
+    outside = [c for c in range(6) if c not in edges[0].client_ids]
+    assert (A[:, outside] == 0).all()
+    # coded payload is consistent: C = A · P over the global index space
+    C_ref = get_field(8).matmul(b.A, P)
+    np.testing.assert_array_equal(np.asarray(b.C), np.asarray(C_ref))
+
+
+def test_hierarchical_spares_fix_wan_erasure():
+    clients = _clients(6, seed=4)
+    weights = [1 / 6] * 6
+    prev = clients[0]
+    ok_with_spares = 0
+    for seed in range(8):
+        res = hierarchy.hierarchical_fednc_round(
+            clients, weights, prev, FedNCConfig(s=8),
+            jax.random.PRNGKey(seed), num_edges=2, spare_per_edge=2,
+            wan_channel=ErasureChannel(p_erase=0.2, seed=seed))
+        ok_with_spares += int(res.decoded)
+    assert ok_with_spares >= 5
+
+
+# ---------------------------------------------------------------------------
+# sparse RLNC
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("density", [0.3, 0.7])
+def test_sparse_matrix_properties(density):
+    A = sparse_coding_matrix(jax.random.PRNGKey(0), 20, 10, 8,
+                             density=density)
+    A = np.asarray(A)
+    # at least one nonzero per row
+    assert (A != 0).any(axis=1).all()
+    frac = (A != 0).mean()
+    assert density - 0.2 < frac < density + 0.25
+
+
+def test_sparse_round_decodes_or_skips_cleanly():
+    clients = _clients(5, seed=7)
+    prev = clients[0]
+    cfg = FedNCConfig(s=8, coding_density=0.6)
+    res = fednc.fednc_round(clients, [0.2] * 5, prev, cfg,
+                            jax.random.PRNGKey(3))
+    if res.decoded:
+        ref = fednc.fedavg_round(clients, [0.2] * 5, prev)
+        np.testing.assert_array_equal(
+            np.asarray(res.global_params["w"]),
+            np.asarray(ref.global_params["w"]))
+    else:
+        assert res.global_params is prev
+
+
+# ---------------------------------------------------------------------------
+# quantized packets (paper ref [22])
+# ---------------------------------------------------------------------------
+
+def test_quantized_round_close_to_fedavg():
+    clients = _clients(4, seed=9)
+    prev = clients[0]
+    cfg = FedNCConfig(s=8, quantize_bits=8)
+    res = fednc.fednc_round(clients, [0.25] * 4, prev, cfg,
+                            jax.random.PRNGKey(5))
+    assert res.decoded
+    ref = fednc.fedavg_round(clients, [0.25] * 4, prev)
+    got = np.asarray(res.global_params["w"], np.float32)
+    want = np.asarray(ref.global_params["w"], np.float32)
+    # int8 quantization error bound: ~ range/255 per client, averaged
+    assert np.max(np.abs(got - want)) < 0.05
+    # and the quantized upload is 4x smaller
+    q, _ = fednc.encode_clients(clients, cfg, jax.random.PRNGKey(6))[0:2]
+    full = fednc.encode_clients(clients, FedNCConfig(s=8),
+                                jax.random.PRNGKey(6))[0]
+    assert q.C.shape[1] * 4 == full.C.shape[1]

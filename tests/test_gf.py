@@ -1,0 +1,82 @@
+"""GF(2^s) field properties (hypothesis) + Gaussian elimination."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf
+
+FIELDS = [1, 2, 3, 4, 8]
+
+
+@pytest.mark.parametrize("s", FIELDS)
+def test_exp_log_inverse_bijection(s):
+    f = gf.get_field(s)
+    q = f.q
+    elems = jnp.arange(1, q, dtype=jnp.uint8)
+    # log then exp is identity on nonzero elements
+    back = jnp.take(f.exp, jnp.take(f.log, elems.astype(jnp.int32)))
+    assert (back == elems).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.sampled_from(FIELDS), seed=st.integers(0, 2**16))
+def test_field_axioms(s, seed):
+    f = gf.get_field(s)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = f.random_elements(k1, (64,))
+    b = f.random_elements(k2, (64,))
+    c = f.random_elements(k3, (64,))
+    # commutativity / associativity of mul
+    assert (f.mul(a, b) == f.mul(b, a)).all()
+    assert (f.mul(f.mul(a, b), c) == f.mul(a, f.mul(b, c))).all()
+    # distributivity over xor-addition
+    assert (f.mul(a, f.add(b, c)) == f.add(f.mul(a, b), f.mul(a, c))).all()
+    # multiplicative identity & zero
+    assert (f.mul(a, jnp.uint8(1)) == a).all()
+    assert (f.mul(a, jnp.uint8(0)) == 0).all()
+    # inverse on non-zeros
+    nz = a[a != 0]
+    if nz.size:
+        assert (f.mul(nz, f.inv(nz)) == 1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([2, 4, 8]), K=st.integers(2, 12),
+       L=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_ge_solve_roundtrip(s, K, L, seed):
+    f = gf.get_field(s)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = f.random_elements(k1, (K, K))
+    P = f.random_elements(k2, (K, L))
+    C = f.matmul(A, P)
+    ok, X = gf.ge_solve(f, A, C)
+    full_rank = int(gf.rank(f, A)) == K
+    assert bool(ok) == full_rank
+    if full_rank:
+        assert (X == P).all()
+
+
+def test_rank_properties():
+    f = gf.get_field(8)
+    key = jax.random.PRNGKey(0)
+    A = f.random_elements(key, (6, 6))
+    r = int(gf.rank(f, A))
+    assert 0 <= r <= 6
+    # duplicating a row cannot increase rank and forces rank < n
+    A2 = A.at[3].set(A[0])
+    assert int(gf.rank(f, A2)) <= 5
+    # identity has full rank
+    assert int(gf.rank(f, jnp.eye(7, dtype=jnp.uint8))) == 7
+    # zero matrix has rank 0
+    assert int(gf.rank(f, jnp.zeros((4, 4), jnp.uint8))) == 0
+
+
+def test_invert():
+    f = gf.get_field(8)
+    key = jax.random.PRNGKey(3)
+    A = f.random_elements(key, (8, 8))
+    ok, Ainv = gf.invert(f, A)
+    if bool(ok):
+        assert (f.matmul(A, Ainv) == jnp.eye(8, dtype=jnp.uint8)).all()

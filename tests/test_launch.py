@@ -1,0 +1,115 @@
+"""Launch layer: input specs, shape table, roofline HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+
+
+def test_shapes_table_exact():
+    assert sp.SHAPES["train_4k"].seq_len == 4096
+    assert sp.SHAPES["train_4k"].global_batch == 256
+    assert sp.SHAPES["prefill_32k"].seq_len == 32768
+    assert sp.SHAPES["prefill_32k"].global_batch == 32
+    assert sp.SHAPES["decode_32k"].global_batch == 128
+    assert sp.SHAPES["long_500k"].seq_len == 524288
+    assert sp.SHAPES["long_500k"].global_batch == 1
+
+
+def test_batch_inputs_vlm_audio():
+    vlm = get_config("llama-3.2-vision-90b")
+    b = sp.batch_inputs(vlm, sp.SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    assert b["memory"].shape == (256, vlm.num_frontend_tokens,
+                                 vlm.d_model)
+    audio = get_config("seamless-m4t-medium")
+    b2 = sp.batch_inputs(audio, sp.SHAPES["prefill_32k"])
+    # audio memory length == seq_len (frames)
+    assert b2["memory"].shape == (32, 32768, audio.d_model)
+
+
+def test_decode_window_policy():
+    dense = get_config("qwen2-72b")
+    assert sp.decode_window(dense, sp.SHAPES["decode_32k"]) is None
+    assert sp.decode_window(dense, sp.SHAPES["long_500k"]) == \
+        dense.long_context_window
+    sc = get_config("starcoder2-15b")        # native SWA stays native
+    assert sp.decode_window(sc, sp.SHAPES["long_500k"]) == 4096
+    rg = get_config("recurrentgemma-9b")
+    assert sp.decode_window(rg, sp.SHAPES["long_500k"]) == 2048
+
+
+def test_decode_inputs_cache_shapes():
+    cfg = get_config("qwen3-8b")
+    d = sp.decode_inputs(cfg, sp.SHAPES["decode_32k"])
+    caches = jax.tree_util.tree_leaves(d["cache"])
+    assert d["token"].shape == (128, 1)
+    # full-attention cache: (G, B, slots, KV, hd) stacked over scan
+    ks = [l for l in caches if l.ndim == 5]
+    assert ks and ks[0].shape[2] == 32768
+
+
+def test_roofline_trip_count_scaling():
+    hlo = """
+HloModule test
+
+%cond.1 (arg: (s32[])) -> pred[] {
+  %arg = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (arg: (s32[])) -> (s32[]) {
+  %arg = (s32[]) parameter(0)
+  %x = f32[128,64]{1,0} parameter(1)
+  %y = f32[64,32]{1,0} parameter(2)
+  %d = f32[128,32]{1,0} dot(%x, %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[1024]{0} all-gather(%d), channel_id=1, replica_groups=[16,16]<=[256]
+  ROOT %t = (s32[]) tuple(%arg)
+}
+
+ENTRY %main (p0: s32[]) -> s32[] {
+  %p0 = s32[] parameter(0)
+  %init = (s32[]) tuple(%p0)
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = s32[] get-tuple-element(%w), index=0
+}
+"""
+    a = rl.analyze_hlo(hlo)
+    # dot: 2*128*32*64 flops, x7 trips
+    assert a.flops == pytest.approx(2 * 128 * 32 * 64 * 7)
+    assert a.collective_count == 7
+    assert a.collective_bytes == pytest.approx(128 * 32 * 4 * 7)
+
+
+def test_roofline_terms_bottleneck():
+    t = rl.roofline_terms(1e15, 1e9, 1e12)
+    assert t["bottleneck"] == "collective"
+    assert t["compute_s"] == pytest.approx(1e15 / 197e12)
+    assert rl.model_flops(1e9, 1e6, training=True) == 6e15
+    assert rl.model_flops(1e9, 1e6, training=False) == 2e15
+
+
+def test_arctic_param_count_and_active_fraction():
+    # NOTE: do not import repro.launch.dryrun here — it force-sets the
+    # 512-device XLA flag, which must not leak into the test process.
+    import numpy as np
+    from repro.launch.sharding import _key_str
+    cfg = get_config("arctic-480b")
+    from repro.models import transformer as tf
+    shapes = jax.eval_shape(
+        lambda: tf.init_lm(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = sum(float(np.prod(l.shape)) for _, l in flat)
+    active = 0.0
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        n = float(np.prod(leaf.shape))
+        if "moe/w_" in name:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        active += n
+    assert total > 4e11                  # ~480B
+    assert active < total * 0.1          # top-2 of 128 experts

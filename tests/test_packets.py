@@ -1,0 +1,61 @@
+"""Packetization: bit-exact pytree <-> symbol roundtrips (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packets as pkt
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.sampled_from([1, 2, 4, 8]), n=st.integers(0, 65))
+def test_bytes_symbols_roundtrip(s, n):
+    rng = np.random.default_rng(n)
+    b = jnp.asarray(rng.integers(0, 256, size=n), jnp.uint8)
+    sym = pkt.bytes_to_symbols(b, s)
+    assert int(sym.max(initial=0)) < 2**s
+    back = pkt.symbols_to_bytes(sym, s)
+    assert (back == b).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**16),
+       dtype=st.sampled_from(["float32", "bfloat16", "int32", "uint8"]))
+def test_pytree_packet_roundtrip(s, seed, dtype):
+    key = jax.random.PRNGKey(seed)
+    dt = jnp.dtype(dtype)
+    if dt == jnp.uint8:
+        leaf = jax.random.randint(key, (3, 5), 0, 255, jnp.int32) \
+            .astype(jnp.uint8)
+    elif dt == jnp.int32:
+        leaf = jax.random.randint(key, (7,), -1000, 1000, jnp.int32)
+    else:
+        leaf = jax.random.normal(key, (4, 3), jnp.float32).astype(dt)
+    tree = {"a": leaf, "nested": {"b": leaf[:2] * 2}}
+    packet, spec = pkt.pytree_to_packet(tree, s=s)
+    back = pkt.packet_to_pytree(packet, spec)
+    for k in ("a",):
+        assert back[k].dtype == tree[k].dtype
+        # bit-exact: compare raw bits, NaN-safe
+        a1 = jax.lax.bitcast_convert_type(tree[k], jnp.uint8)
+        a2 = jax.lax.bitcast_convert_type(back[k], jnp.uint8)
+        assert (a1 == a2).all()
+
+
+def test_quantize_dequantize():
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (64, 8)),
+            "b": jax.random.normal(key, (8,)) * 10}
+    q, spec = pkt.quantize_pytree(tree, bits=8)
+    back = pkt.dequantize_pytree(q, spec)
+    for k in tree:
+        scale = float(jnp.max(tree[k]) - jnp.min(tree[k])) / 255
+        assert float(jnp.max(jnp.abs(back[k] - tree[k]))) <= scale + 1e-6
+
+
+def test_stack_packets_shape_guard():
+    a = jnp.zeros((10,), jnp.uint8)
+    b = jnp.zeros((11,), jnp.uint8)
+    with pytest.raises(ValueError):
+        pkt.stack_packets([a, b])

@@ -1,0 +1,73 @@
+"""RLNC encode/recode/decode properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf, rlnc
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([4, 8]), K=st.integers(2, 8),
+       L=st.integers(1, 200), seed=st.integers(0, 2**16))
+def test_encode_decode_roundtrip(s, K, L, seed):
+    f = gf.get_field(s)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    P = f.random_elements(k1, (K, L))
+    A = rlnc.random_coding_matrix(k2, K, K, s)
+    batch = rlnc.encode(P, A, s, impl="jnp")
+    ok, X = rlnc.decode(batch, s)
+    if bool(ok):
+        assert (X == P).all()
+    else:
+        assert int(gf.rank(f, A)) < K
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([8]), K=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+def test_recode_preserves_decodability_semantics(s, K, seed):
+    """Recoded tuples still decode to the ORIGINAL packets when the
+    composed coding matrix is invertible (relay property, Prop. 2)."""
+    f = gf.get_field(s)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    P = f.random_elements(k1, (K, 50))
+    A = rlnc.random_coding_matrix(k2, K, K, s)
+    batch = rlnc.encode(P, A, s, impl="jnp")
+    re = rlnc.recode(batch, k3, K, s)
+    # invariant: C' = A'·P for the composed coding matrix A'
+    assert (f.matmul(re.A, P) == re.C).all()
+    ok, X = rlnc.decode(re, s)
+    if bool(ok):
+        assert (X == P).all()
+
+
+def test_systematic_prefix_is_identity():
+    A = rlnc.systematic_coding_matrix(jax.random.PRNGKey(0), 7, 5, 8)
+    assert (A[:5] == jnp.eye(5, dtype=jnp.uint8)).all()
+    assert A.shape == (7, 5)
+
+
+def test_extra_tuples_survive_erasure():
+    """K+2 coded tuples tolerate 2 erasures (robustness, §III-A.3)."""
+    s, K, L = 8, 5, 40
+    f = gf.get_field(s)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    P = f.random_elements(k1, (K, L))
+    A = rlnc.random_coding_matrix(k2, K + 2, K, s)
+    batch = rlnc.encode(P, A, s, impl="jnp")
+    surviving = batch[jnp.asarray([0, 2, 3, 5, 6])]  # drop 2
+    if bool(rlnc.decodable(surviving, s)):
+        picked = rlnc.select_decodable_rows(surviving, s)
+        ok, X = rlnc.decode(picked, s)
+        assert bool(ok) and (X == P).all()
+
+
+def test_float_field_roundtrip():
+    key = jax.random.PRNGKey(0)
+    P = jax.random.normal(key, (6, 100))
+    A = rlnc.float_coding_matrix(jax.random.PRNGKey(1), 6, 6)
+    C = rlnc.float_encode(P, A)
+    ok, X = rlnc.float_decode(A, C)
+    assert bool(ok)
+    assert float(jnp.max(jnp.abs(X - P))) < 1e-3

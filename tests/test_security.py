@@ -1,0 +1,72 @@
+"""Prop. 2 error bound, Table-I error probabilities, eavesdropper."""
+import numpy as np
+import pytest
+
+from repro.core import security
+from repro.core.channel import Eavesdropper, MultiHopChannel
+from repro.core.rlnc import EncodedBatch, random_coding_matrix
+
+import jax
+import jax.numpy as jnp
+
+
+def test_bound_matches_paper_table1():
+    """Paper Table I: p_e for (s,η) = (1,1), (4,1), (8,1), (8,100)."""
+    assert security.error_probability_bound(1, 1) == pytest.approx(0.5)
+    assert security.error_probability_bound(4, 1) == pytest.approx(0.0625)
+    assert security.error_probability_bound(8, 1) == pytest.approx(
+        0.0039, abs=1e-4)
+    assert security.error_probability_bound(8, 100) == pytest.approx(
+        0.3239, abs=2e-3)
+
+
+def test_bound_monotonicity():
+    # decreasing in s, increasing in eta
+    for eta in (1, 10):
+        vals = [security.error_probability_bound(s, eta)
+                for s in (1, 2, 4, 8)]
+        assert vals == sorted(vals, reverse=True)
+    for s in (1, 8):
+        vals = [security.error_probability_bound(s, e)
+                for e in (1, 10, 100)]
+        assert vals == sorted(vals)
+
+
+def test_singular_probability_close_to_bound_for_eta1():
+    """For η=1 (one coding stage) the exact K×K singularity probability
+    is upper-bounded by ~ sum of the geometric tail and is close to
+    1/2^s for large s."""
+    p = security.singular_probability_uniform(K=10, s=8)
+    assert 0.003 < p < 0.005
+
+
+@pytest.mark.slow
+def test_simulated_error_rate_within_bound():
+    for s, eta in [(4, 1), (8, 1)]:
+        rate = security.simulate_error_probability(
+            K=6, s=s, eta=eta, trials=150, seed=0)
+        bound = security.error_probability_bound(s, eta)
+        # simulation must not exceed the bound by more than MC noise
+        assert rate <= bound + 3 * np.sqrt(bound / 150 + 1e-4)
+
+
+def test_eavesdropper_partial_interception_leaks_nothing():
+    s, K = 8, 8
+    key = jax.random.PRNGKey(0)
+    A = random_coding_matrix(key, K, K, s)
+    batch = EncodedBatch(A=A, C=jnp.zeros((K, 4), jnp.uint8))
+    ev = Eavesdropper(p_intercept=0.3, seed=1)
+    res = ev.attack_encoded(batch, s)
+    if res["rank"] < K:
+        assert res["full_leak"] is False
+        assert res["partial_leak_packets"] == 0
+    # FedAvg baseline leaks every intercepted packet
+    plain = ev.attack_plain(K)
+    assert plain["partial_leak_packets"] == plain["intercepted"]
+
+
+def test_eavesdropper_leak_probability_formula():
+    # must capture all K tuples: p^K factor dominates
+    p = security.eavesdropper_full_leak_probability(K=10, p_intercept=0.5)
+    assert p < 0.5**10 + 1e-9
+    assert security.fedavg_expected_leak(10, 0.5) == 5.0
