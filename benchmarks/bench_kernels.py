@@ -1,34 +1,93 @@
-"""GF coding kernel micro-benchmarks: jnp oracle vs Pallas (interpret).
+"""GF coding kernel micro-benchmarks: unpacked vs lane-packed, chunked.
 
-On this CPU container the Pallas kernel runs in interpret mode (a
-correctness harness, not a speed claim) — the derived column reports
-symbol throughput of the jnp path, which IS the production CPU path,
-plus the paper-relevant encode cost per FL round."""
+Compares the three interpret-free formulations of C = A·P through the
+engine registry, each oracle-checked against the table-based jnp
+reference before timing:
+
+  * ``jnp``        — table lookup (log/exp gathers)
+  * ``jnp_clmul``  — the unpacked Pallas kernel's carry-less-multiply
+                     math in pure jnp (one symbol per int32 lane)
+  * ``jnp_packed`` — the lane-packed kernel's ladder in pure jnp
+                     (4 symbols per int32 lane), run through the
+                     engine's chunked streaming executor
+
+On this CPU container the Pallas kernels run in interpret mode (a
+correctness harness, not a speed claim), so the packed-vs-unpacked
+throughput claim is measured on the jnp formulations — identical math,
+identical chunking, no interpreter overhead.  On TPU the same registry
+names resolve to the compiled kernels.
+
+Besides the CSV rows, writes ``BENCH_kernels.json`` (cwd) with
+bytes/s + symbols/s per (kernel, L) and the packed:unpacked speedup,
+so the perf trajectory is machine-readable from this PR onward.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
+
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gf import get_field
-from repro.kernels import ops
+from repro.engine import CodingEngine, EngineConfig
+from repro.kernels import ref
 
 from .common import emit, time_us
 
+# lane lengths (symbols): 64 KiB, 1 MiB, 4 MiB packets at s=8
+LANE_SWEEP = (1 << 16, 1 << 20, 1 << 22)
+CHUNK_L = 1 << 18
+K = 10
+S = 8
 
-def run() -> None:
+KERNELS = ("jnp", "jnp_clmul", "jnp_packed")
+
+
+def _bench_one(kernel: str, s: int, K: int, L: int) -> dict:
+    f = get_field(s)
     key = jax.random.PRNGKey(0)
-    for s, K, L in [(8, 10, 1 << 16), (8, 10, 1 << 20), (1, 10, 1 << 20),
-                    (4, 16, 1 << 18)]:
-        f = get_field(s)
-        A = f.random_elements(key, (K, K))
-        P = f.random_elements(jax.random.fold_in(key, 1), (K, L))
+    A = f.random_elements(key, (K, K))
+    P = f.random_elements(jax.random.fold_in(key, 1), (K, L))
+    eng = CodingEngine(EngineConfig(s=s, kernel=kernel, chunk_l=CHUNK_L))
+    # oracle check before timing: exact field math, any mismatch is a bug
+    got = eng.matmul(A, P)
+    want = ref.gf_matmul_ref(A, P, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    us = time_us(lambda: eng.matmul(A, P).block_until_ready(), iters=3)
+    sym = K * L
+    return {
+        "us_per_call": us,
+        "symbols_per_s": sym / (us / 1e6),
+        "bytes_per_s": sym * s / 8 / (us / 1e6),   # s bits per symbol
+        "s": s, "K": K, "L": L,
+        "chunk_l": CHUNK_L,
+    }
 
-        jitted = jax.jit(lambda a, p: ops.gf_matmul(a, p, s=s, impl="jnp"))
-        jitted(A, P).block_until_ready()
-        us = time_us(lambda: jitted(A, P).block_until_ready(), iters=3)
-        mbps = (K * L) / (us / 1e6) / 1e6
-        emit(f"gf_encode_jnp_s{s}_K{K}_L{L}", us,
-             f"{mbps:.0f}Msym/s;round_bytes={K * L}")
+
+def run(json_path: str = "BENCH_kernels.json") -> dict:
+    results: dict[str, dict] = {}
+    for L in LANE_SWEEP:
+        for kernel in KERNELS:
+            r = _bench_one(kernel, S, K, L)
+            name = f"gf_encode_{kernel}_s{S}_K{K}_L{L}"
+            results[name] = r
+            emit(name, r["us_per_call"],
+                 f"{r['symbols_per_s'] / 1e6:.0f}Msym/s;"
+                 f"chunk={CHUNK_L};round_bytes={K * L}")
+        speedup = (results[f"gf_encode_jnp_packed_s{S}_K{K}_L{L}"]
+                   ["symbols_per_s"] /
+                   results[f"gf_encode_jnp_clmul_s{S}_K{K}_L{L}"]
+                   ["symbols_per_s"])
+        results[f"packed_vs_unpacked_speedup_L{L}"] = {"x": speedup}
+        emit(f"packed_vs_unpacked_L{L}", 0.0, f"{speedup:.2f}x")
+    # small-field sanity row (s=4, the paper's other field size)
+    r4 = _bench_one("jnp_packed", 4, 16, 1 << 18)
+    results["gf_encode_jnp_packed_s4_K16_L262144"] = r4
+    emit("gf_encode_jnp_packed_s4_K16_L262144", r4["us_per_call"],
+         f"{r4['symbols_per_s'] / 1e6:.0f}Msym/s")
+    pathlib.Path(json_path).write_text(json.dumps(results, indent=2))
+    return results
 
 
 if __name__ == "__main__":

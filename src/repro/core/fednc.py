@@ -11,6 +11,12 @@ One communication round:
     else:
         w <- w_prev                                        (skip round)
 
+The coded math — batched packetization, chunk-streamed kernel
+execution, jit-safe row selection, decode — lives in
+repro.engine.CodingEngine; this module is the thin Alg.-1 adapter that
+maps FedNCConfig onto an engine and turns decoded packets back into a
+weighted FedAvg aggregate.
+
 The encode/decode field path is bit-exact (see core.packets), so when
 decoding succeeds the aggregated model equals plain FedAvg on the same
 client set — coding costs zero accuracy, exactly the paper's claim for
@@ -18,29 +24,45 @@ the iid/no-loss setting.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field as dfield
-from typing import Any, Callable, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.defaults import DEFAULT_CHUNK_L
 from . import packets as pkt
 from .channel import ChannelReport
-from .gf import get_field
-from .rlnc import EncodedBatch, decode, encode, random_coding_matrix
+from .rlnc import EncodedBatch
 
 
 @dataclass(frozen=True)
 class FedNCConfig:
     s: int = 8                 # field size (symbol bits), paper Table I
-    kernel_impl: str = "auto"  # 'jnp' | 'pallas' | 'auto'
+    kernel_impl: str = "auto"  # engine-registry kernel name
     extra_tuples: int = 0      # send K + extra coded tuples (erasure headroom)
     systematic: bool = False   # identity-prefixed coding matrix
     quantize_bits: int = 0     # 0 = bit-exact float bytes (default);
     #                            8 = paper-[22] affine int8 packets (4x
     #                            smaller uploads, lossy)
     coding_density: float = 1.0  # <1.0 = sparse RLNC coefficients
+    chunk_l: int = DEFAULT_CHUNK_L  # streamed-chunk symbols (0 = one shot)
+
+
+def engine_for(cfg: FedNCConfig) -> "repro.engine.CodingEngine":
+    """The (cached) CodingEngine realizing this round configuration."""
+    # call-time import: repro.engine eagerly imports repro.core, so this
+    # adapter direction must stay lazy to keep both import orders legal
+    from repro.engine import EngineConfig, get_engine
+    return get_engine(EngineConfig(
+        s=cfg.s,
+        kernel=cfg.kernel_impl,
+        chunk_l=cfg.chunk_l,
+        extra_tuples=cfg.extra_tuples,
+        systematic=cfg.systematic,
+        coding_density=cfg.coding_density,
+    ))
 
 
 @dataclass
@@ -51,6 +73,55 @@ class RoundResult:
     n_aggregated: int
 
 
+def _packetize(client_params: Sequence[Any], cfg: FedNCConfig
+               ) -> tuple[jnp.ndarray, pkt.PacketSpec, Optional[list]]:
+    """(P, spec, qspecs): vmap-batched packetization of K clients.
+
+    Quantization (the lossy paper-[22] variant) stays per-client — it
+    produces a few Python floats of metadata each — but the byte/symbol
+    packetization itself is always the single batched pass."""
+    engine = engine_for(cfg)
+    if cfg.quantize_bits:
+        qspecs, qtrees = [], []
+        for p in client_params:
+            q, qs = pkt.quantize_pytree(p, bits=cfg.quantize_bits)
+            qtrees.append(q)
+            qspecs.append(qs)
+        P, spec = engine.packetize(qtrees)
+        return P, spec, qspecs
+    P, spec = engine.packetize(client_params)
+    return P, spec, None
+
+
+def _aggregate(P_hat: jnp.ndarray, spec: pkt.PacketSpec,
+               weights: Sequence[float], cfg: FedNCConfig,
+               qspecs: Optional[list] = None) -> Any:
+    """Decoded packets -> weighted FedAvg aggregate (paper §II-A)."""
+    K = P_hat.shape[0]
+    w = np.asarray(weights, np.float32)
+    w = w / w.sum()
+    stacked = pkt.packets_to_pytrees(P_hat, spec)
+    if qspecs is not None:
+        trees = [jax.tree_util.tree_map(lambda x, k=k: x[k], stacked)
+                 for k in range(K)]
+        trees = [pkt.dequantize_pytree(t, qs)
+                 for t, qs in zip(trees, qspecs)]
+        return jax.tree_util.tree_map(
+            lambda *xs: sum(
+                wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
+            ).astype(xs[0].dtype),
+            *trees,
+        )
+    # weighted sum over the stacked client axis, term order matching
+    # fedavg_round's sequential sum so FedNC == FedAvg stays bit-exact
+    return jax.tree_util.tree_map(
+        lambda x: sum(
+            wk * jnp.asarray(x[k], jnp.float32) for k, wk in enumerate(w)
+        ).astype(x.dtype),
+        stacked,
+    )
+
+
 def encode_clients(client_params: Sequence[Any], cfg: FedNCConfig, key
                    ) -> tuple[EncodedBatch, pkt.PacketSpec, Optional[list]]:
     """Packetize + RLNC-encode K client parameter pytrees.
@@ -58,78 +129,40 @@ def encode_clients(client_params: Sequence[Any], cfg: FedNCConfig, key
     Returns (batch, spec, qspecs); qspecs is per-client quantization
     metadata when cfg.quantize_bits > 0 (it travels uncoded alongside
     the coding vectors — a few floats per tensor, like a_i itself)."""
-    rows = []
-    spec = None
-    qspecs = None
-    if cfg.quantize_bits:
-        qspecs = []
-        for p in client_params:
-            q, qs = pkt.quantize_pytree(p, bits=cfg.quantize_bits)
-            sym, spec = pkt.pytree_to_packet(q, s=cfg.s)
-            rows.append(sym)
-            qspecs.append(qs)
-    else:
-        for p in client_params:
-            sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
-            rows.append(sym)
-    P = pkt.stack_packets(rows)
-    K = len(rows)
-    n = K + cfg.extra_tuples
-    if cfg.systematic:
-        from .rlnc import systematic_coding_matrix
-        A = systematic_coding_matrix(key, n, K, cfg.s)
-    elif cfg.coding_density < 1.0:
-        from .rlnc import sparse_coding_matrix
-        A = sparse_coding_matrix(key, n, K, cfg.s,
-                                 density=cfg.coding_density)
-    else:
-        A = random_coding_matrix(key, n, K, cfg.s)
-    return encode(P, A, cfg.s, impl=cfg.kernel_impl), spec, qspecs
+    engine = engine_for(cfg)
+    P, spec, qspecs = _packetize(client_params, cfg)
+    K = P.shape[0]
+    A = engine.coding_matrix(key, K + cfg.extra_tuples, K)
+    return engine.encode(P, A), spec, qspecs
 
 
 def decode_and_aggregate(batch: EncodedBatch, spec: pkt.PacketSpec,
                          weights: Sequence[float], prev_global: Any,
                          cfg: FedNCConfig,
                          qspecs: Optional[list] = None) -> RoundResult:
-    """Server side of Alg. 1: GE decode, weighted FedAvg, or skip."""
+    """Server side of Alg. 1: decode (selecting K rows on-device when
+    n > K), weighted FedAvg, or skip."""
     K = batch.K
     if batch.n < K:
         return RoundResult(prev_global, False, None, 0)
-    if batch.n > K:
-        from .rlnc import select_decodable_rows
-        batch = select_decodable_rows(batch, cfg.s)
-    ok, P_hat = decode(batch, cfg.s)
-    if not bool(ok):
+    ok, P_hat = engine_for(cfg).decode(batch)
+    if not ok:
         return RoundResult(prev_global, False, None, 0)
-    w = np.asarray(weights, np.float32)
-    w = w / w.sum()
-    decoded_trees = [pkt.packet_to_pytree(P_hat[k], spec) for k in range(K)]
-    if qspecs is not None:
-        decoded_trees = [pkt.dequantize_pytree(t, qs)
-                         for t, qs in zip(decoded_trees, qspecs)]
-    agg = jax.tree_util.tree_map(
-        lambda *xs: sum(
-            wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
-        ).astype(xs[0].dtype),
-        *decoded_trees,
-    )
+    agg = _aggregate(P_hat, spec, weights, cfg, qspecs=qspecs)
     return RoundResult(agg, True, None, K)
 
 
 def fednc_round(client_params: Sequence[Any], weights: Sequence[float],
                 prev_global: Any, cfg: FedNCConfig, key,
                 channel=None) -> RoundResult:
-    """Full Alg.-1 round with an optional channel between encode/decode."""
-    batch, spec, qspecs = encode_clients(client_params, cfg, key)
-    report = None
-    if channel is not None:
-        batch, report = channel.transmit_encoded(batch, cfg.s)
-        if not report.decodable:
-            return RoundResult(prev_global, False, report, 0)
-    res = decode_and_aggregate(batch, spec, weights, prev_global, cfg,
-                               qspecs=qspecs)
-    res.report = report
-    return res
+    """Full Alg.-1 round: a thin adapter over CodingEngine.round()."""
+    engine = engine_for(cfg)
+    P, spec, qspecs = _packetize(client_params, cfg)
+    out = engine.round(P, key, channel=channel)
+    if not out.ok:
+        return RoundResult(prev_global, False, out.report, 0)
+    agg = _aggregate(out.packets, spec, weights, cfg, qspecs=qspecs)
+    return RoundResult(agg, True, out.report, P.shape[0])
 
 
 def fedavg_round(client_params: Sequence[Any], weights: Sequence[float],
@@ -138,8 +171,7 @@ def fedavg_round(client_params: Sequence[Any], weights: Sequence[float],
     K = len(client_params)
     w = np.asarray(weights, np.float32)
     if channel is not None:
-        stacked = jnp.stack(
-            [pkt.pytree_to_packet(p, s=8)[0] for p in client_params])
+        stacked = pkt.pytrees_to_packets(client_params, s=8)[0]
         delivered, idx, report = channel.transmit_plain(stacked)
         if len(idx) == 0:
             return RoundResult(prev_global, False, report, 0)

@@ -27,9 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import packets as pkt
-from .fednc import FedNCConfig, RoundResult, decode_and_aggregate
-from .gf import get_field, rank as gf_rank
-from .rlnc import EncodedBatch, encode as rl_encode, select_decodable_rows
+from .fednc import FedNCConfig, RoundResult, decode_and_aggregate, engine_for
+from .gf import get_field
+from .rlnc import EncodedBatch
 
 
 @dataclass(frozen=True)
@@ -50,7 +50,7 @@ def edge_encode(P: jnp.ndarray, edge: EdgeGroup, K: int, n_out: int,
     field_ = get_field(cfg.s)
     sub = P[jnp.asarray(edge.client_ids, jnp.int32)]      # (K_e, L)
     A_local = field_.random_elements(key, (n_out, len(edge.client_ids)))
-    C = rl_encode(sub, A_local, cfg.s, impl=cfg.kernel_impl).C
+    C = engine_for(cfg).encode(sub, A_local).C            # chunk-streamed
     A_global = jnp.zeros((n_out, K), jnp.uint8)
     A_global = A_global.at[:, jnp.asarray(edge.client_ids)].set(A_local)
     return EncodedBatch(A=A_global, C=C)
@@ -65,11 +65,7 @@ def hierarchical_fednc_round(client_params: Sequence[Any],
                              wan_channel=None) -> RoundResult:
     """Full hierarchical round: client -> edge encode -> WAN -> server."""
     K = len(client_params)
-    rows, spec = [], None
-    for p in client_params:
-        sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
-        rows.append(sym)
-    P = pkt.stack_packets(rows)
+    P, spec = pkt.pytrees_to_packets(client_params, s=cfg.s)
 
     edges = partition_edges(K, num_edges)
     batches = []
@@ -87,10 +83,8 @@ def hierarchical_fednc_round(client_params: Sequence[Any],
         if not report.decodable:
             return RoundResult(prev_global, False, report, 0)
 
-    if int(gf_rank(get_field(cfg.s), combined.A)) < K:
-        return RoundResult(prev_global, False, report, 0)
-    picked = (select_decodable_rows(combined, cfg.s)
-              if combined.n != K else combined)
-    res = decode_and_aggregate(picked, spec, weights, prev_global, cfg)
+    # decode_and_aggregate row-selects on-device when n > K and skips
+    # the round itself when the combined matrix is rank-deficient.
+    res = decode_and_aggregate(combined, spec, weights, prev_global, cfg)
     res.report = report
     return res

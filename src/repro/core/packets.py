@@ -144,6 +144,58 @@ def stack_packets(packets: list[jnp.ndarray]) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# batched packetization (vmap over clients — the engine hot path)
+# ---------------------------------------------------------------------------
+
+def pytrees_to_packets(trees: list, s: int = 8
+                       ) -> tuple[jnp.ndarray, PacketSpec]:
+    """K same-structure pytrees -> (K, L) symbol matrix in one shot.
+
+    Equivalent to ``stack_packets([pytree_to_packet(t, s)[0] ...])``
+    but the byte-flatten and symbol-split run once under `vmap` over
+    the stacked client axis instead of K separate Python-loop traces.
+    """
+    if not trees:
+        raise ValueError("need at least one client pytree")
+    leaves0, treedef = jax.tree_util.tree_flatten(trees[0])
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+    sleaves = jax.tree_util.tree_flatten(stacked)[0]
+    chunks = [jax.vmap(_leaf_to_bytes)(l) for l in sleaves]
+    K = len(trees)
+    b = (jnp.concatenate(chunks, axis=1) if chunks
+         else jnp.zeros((K, 0), jnp.uint8))
+    spec = PacketSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves0),
+        dtypes=tuple(jnp.asarray(l).dtype for l in leaves0),
+        s=s,
+        n_bytes=int(b.shape[1]),
+    )
+    sym = jax.vmap(lambda row: bytes_to_symbols(row, s))(b)
+    return sym, spec
+
+
+def packets_to_pytrees(P_hat: jnp.ndarray, spec: PacketSpec):
+    """(K, L) decoded symbols -> ONE stacked pytree (leading K axis).
+
+    Batched inverse of :func:`pytrees_to_packets`; index the leading
+    axis (or tree_map over it) to recover per-client trees.
+    """
+    b = jax.vmap(lambda row: symbols_to_bytes(row, spec.s))(P_hat)
+    b = b[:, : spec.n_bytes]
+    leaves = []
+    off = 0
+    for shape, dtype in zip(spec.shapes, spec.dtypes):
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = n * jnp.dtype(dtype).itemsize
+        leaves.append(jax.vmap(
+            lambda bb, sh=shape, dt=dtype: _bytes_to_leaf(bb, sh, dt)
+        )(b[:, off: off + nbytes]))
+        off += nbytes
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
 # quantized variant (paper ref [22]: pruning-quantization coding design)
 # ---------------------------------------------------------------------------
 

@@ -54,11 +54,12 @@ def encode(P: jnp.ndarray, A: jnp.ndarray, s: int,
            *, impl: str = "auto") -> EncodedBatch:
     """C = A·P over GF(2^s).  P: (K, L) symbols, A: (n, K) coefficients.
 
-    impl: 'auto' | 'jnp' | 'pallas'.  'auto' picks the Pallas GF kernel
-    when the packet is large enough to amortize it, else the jnp path.
+    impl is a kernel-registry name (repro.engine.registry): 'auto',
+    'jnp', 'pallas', 'jnp_packed', ... — 'auto' resolves to the
+    lane-packed kernel for the current backend.
     """
-    from repro.kernels import ops as kops  # late import, avoids cycle
-    C = kops.gf_matmul(A, P, s=s, impl=impl)
+    from repro.engine.registry import gf_matmul  # late import, avoids cycle
+    C = gf_matmul(A, P, s=s, kernel=impl)
     return EncodedBatch(A=jnp.asarray(A, jnp.uint8), C=C)
 
 
@@ -122,23 +123,23 @@ def decode(batch: EncodedBatch, s: int):
     return ge_solve(field, batch.A, batch.C)
 
 
-def select_decodable_rows(batch: EncodedBatch, s: int) -> EncodedBatch:
-    """Greedily pick K linearly-independent tuples out of n >= K (numpy
-    host-side helper for channel simulations; not jit)."""
-    import numpy as np
+def select_rows(batch: EncodedBatch, s: int
+                ) -> tuple[jnp.ndarray, EncodedBatch]:
+    """(ok, K-row batch): greedily pick K linearly-independent tuples
+    out of n >= K with the jit-safe incremental-GE pass
+    (repro.engine.select) — fully on-device, no host numpy."""
+    from repro.engine.select import incremental_select
+    ok, idx, _ = incremental_select(batch.A, s)
+    return ok, EncodedBatch(A=batch.A[idx], C=batch.C[idx])
 
-    field = get_field(s)
-    A = np.asarray(batch.A)
-    picked: list[int] = []
-    for i in range(A.shape[0]):
-        cand = picked + [i]
-        sub = jnp.asarray(A[cand])
-        if int(gf_rank(field, sub)) == len(cand):
-            picked.append(i)
-        if len(picked) == batch.K:
-            break
-    idx = jnp.asarray(picked + [0] * (batch.K - len(picked)), jnp.int32)
-    return EncodedBatch(A=batch.A[idx], C=batch.C[idx])
+
+def select_decodable_rows(batch: EncodedBatch, s: int) -> EncodedBatch:
+    """Greedy K-independent-row selection (legacy signature).
+
+    Same selection as the historical host-side numpy loop — greedy in
+    row order — but computed on-device; prefer :func:`select_rows`,
+    which also reports whether full rank was reached."""
+    return select_rows(batch, s)[1]
 
 
 # ---------------------------------------------------------------------------

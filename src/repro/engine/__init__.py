@@ -1,0 +1,21 @@
+"""repro.engine — the unified RLNC coding spine.
+
+engine.py   — EngineConfig + CodingEngine: batched packetization,
+              chunk-streamed encode/decode, jit-safe selection,
+              shard_map lane parallelism, the full round pipeline.
+registry.py — named kernel registry (single dispatch point replacing
+              the impl="auto"|"jnp"|"pallas" strings of the seed).
+select.py   — incremental-GE independent-row selector (on-device
+              replacement for the host-side numpy greedy loop).
+"""
+from .engine import (CodingEngine, DEFAULT_CHUNK_L, EngineConfig,
+                     EngineRound, get_engine)
+from .registry import (available_kernels, gf_matmul, register_kernel,
+                       resolve_kernel, resolve_kernel_name)
+from .select import incremental_select
+
+__all__ = [
+    "CodingEngine", "DEFAULT_CHUNK_L", "EngineConfig", "EngineRound",
+    "get_engine", "available_kernels", "gf_matmul", "register_kernel",
+    "resolve_kernel", "resolve_kernel_name", "incremental_select",
+]

@@ -1,0 +1,14 @@
+"""Leaf constants shared by the engine and its core adapters.
+
+This module must stay dependency-free: `repro.core.fednc` imports it at
+module level while `repro.engine.engine` imports `repro.core` at module
+level — a leaf breaks that cycle for both import orders (submodule
+imports from a partially-initialized package are safe; attribute-style
+`from repro.engine import ...` is not).
+"""
+
+#: default streamed-chunk width, in symbols.  2^18 uint8 symbols =
+#: 256 KiB per (row of a) block — far under VMEM with K ~ tens, and a
+#: multiple of every (pow2) mesh-axis size and the int32 lane-pack
+#: factor.
+DEFAULT_CHUNK_L = 1 << 18

@@ -1,0 +1,129 @@
+"""Kernel registry: one dispatch point for every GF coded-matmul path.
+
+The seed scattered backend choice across three stringly-typed sites
+(`kernels.ops.gf_matmul(impl=...)`, `rlnc.encode(impl=...)`,
+`FedNCConfig.kernel_impl`).  All of them now resolve here.
+
+A *kernel* is a callable ``fn(A, P, *, s) -> C`` computing C = A·P over
+GF(2^s) for A (n, K) uint8 and P (K, L) uint8.  Built-in entries:
+
+======================  ====================================================
+``jnp``                 table-based jnp oracle (independent formulation —
+                        the correctness reference)
+``jnp_clmul``           unpacked carry-less multiply in pure jnp (the
+                        Pallas kernel's math, interpret-free)
+``jnp_packed``          int32 lane-packed ladder in pure jnp — fastest CPU
+                        path (4 symbols per vector lane)
+``pallas``              unpacked Pallas TPU kernel (interpret on CPU)
+``pallas_packed``       lane-packed Pallas TPU kernel (interpret on CPU)
+``auto``                alias: ``pallas_packed`` on TPU, ``jnp_packed``
+                        elsewhere
+======================  ====================================================
+
+Downstream projects register custom backends with
+:func:`register_kernel` (e.g. a GPU clmul kernel) and select them by
+name through :class:`repro.engine.EngineConfig`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.gf2_xor import gf2_matmul_pallas
+from repro.kernels.gf_matmul import gf_matmul_pallas, gf_matmul_pallas_packed
+
+KernelFn = Callable[..., jnp.ndarray]
+
+_KERNELS: Dict[str, KernelFn] = {}
+
+
+def register_kernel(name: str, fn: KernelFn, *,
+                    overwrite: bool = False) -> KernelFn:
+    """Register a coded-matmul backend under `name`.
+
+    `fn(A, P, *, s)` must return A·P over GF(2^s) as (n, L) uint8,
+    bit-exact against the `jnp` table oracle.
+    """
+    if name == "auto":
+        raise ValueError("'auto' is a reserved alias")
+    if name in _KERNELS and not overwrite:
+        raise ValueError(f"kernel {name!r} already registered")
+    _KERNELS[name] = fn
+    return fn
+
+
+def available_kernels() -> tuple[str, ...]:
+    return tuple(sorted(_KERNELS)) + ("auto",)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_name(name: str) -> str:
+    """Resolve the 'auto' alias against the current backend."""
+    if name == "auto":
+        return "pallas_packed" if _on_tpu() else "jnp_packed"
+    return name
+
+
+def resolve_kernel(name: str) -> tuple[str, KernelFn]:
+    """(resolved_name, fn) for a registry name; raises on unknown."""
+    resolved = resolve_kernel_name(name)
+    try:
+        return resolved, _KERNELS[resolved]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel {name!r}; available: {available_kernels()}"
+        ) from None
+
+
+def gf_matmul(A, P, *, s: int = 8, kernel: str = "auto") -> jnp.ndarray:
+    """Convenience: one-shot registry-dispatched C = A·P."""
+    return resolve_kernel(kernel)[1](A, P, s=s)
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+# ---------------------------------------------------------------------------
+# The pure-jnp formulations are jitted here (s static) so chunk-streamed
+# registry calls dispatch one fused computation per chunk instead of
+# op-by-op; the Pallas entry points are already jitted at definition.
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _jnp_kernel(A, P, *, s: int):
+    if s == 1:
+        return ref.gf2_matmul_ref(A, P)
+    return ref.gf_matmul_ref(A, P, s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _jnp_clmul_kernel(A, P, *, s: int):
+    return ref.gf_matmul_clmul_ref(A, P, s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _jnp_packed_kernel(A, P, *, s: int):
+    return ref.gf_matmul_packed_ref(A, P, s)
+
+
+def _pallas_kernel(A, P, *, s: int):
+    interpret = not _on_tpu()
+    if s == 1:
+        return gf2_matmul_pallas(A, P, interpret=interpret)
+    return gf_matmul_pallas(A, P, s=s, interpret=interpret)
+
+
+def _pallas_packed_kernel(A, P, *, s: int):
+    return gf_matmul_pallas_packed(A, P, s=s, interpret=not _on_tpu())
+
+
+register_kernel("jnp", _jnp_kernel)
+register_kernel("jnp_clmul", _jnp_clmul_kernel)
+register_kernel("jnp_packed", _jnp_packed_kernel)
+register_kernel("pallas", _pallas_kernel)
+register_kernel("pallas_packed", _pallas_packed_kernel)

@@ -1,0 +1,86 @@
+"""jit-safe incremental-GE row selection for the n > K erasure path.
+
+The seed's `select_decodable_rows` was a host-side numpy greedy loop
+that recomputed the rank of the picked prefix from scratch for every
+candidate row — O(n·K) full eliminations, with a device->host sync per
+row.  This module replaces it with a single forward elimination pass
+that maintains pivot state on-device:
+
+* ``B`` (K, K): the reduced basis — row c holds the (normalized) basis
+  vector whose pivot sits in column c, zero if that pivot is unfilled.
+  ``B`` is kept in *reduced* row-echelon form, so reducing a candidate
+  row against the whole basis is one GF mat-vec.
+* A candidate row is selected iff its reduction against the basis is
+  nonzero (i.e. it is independent of everything selected so far) —
+  exactly the greedy matroid rule of the old helper, so the selected
+  index set is identical.
+
+Everything is `lax.fori_loop` + `lax.cond`: no host numpy, no sync,
+usable inside jit and under vmap over batches of coding matrices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gf import get_field
+
+
+@functools.lru_cache(maxsize=None)
+def _select_fn(s: int):
+    field = get_field(s)
+
+    @jax.jit
+    def run(A: jnp.ndarray):
+        A = jnp.asarray(A, jnp.uint8)
+        n, K = A.shape
+
+        def body(i, state):
+            B, filled, sel, count = state
+            row = A[i]
+            # one-shot reduction: B is in RREF, so subtracting
+            # row[c]·B[c] for every filled pivot c zeroes row at all
+            # filled pivot columns in a single pass.
+            coeffs = jnp.where(filled, row, jnp.uint8(0))
+            red = row ^ field.matmul(coeffs[None, :], B)[0]
+            nz = red != 0
+            found = jnp.any(nz)
+            piv = jnp.argmax(nz)                # first nonzero column
+
+            def pick(args):
+                B, filled, sel, count = args
+                newrow = field.mul(red, field.inv(red[piv]))
+                # keep RREF: clear column `piv` from existing rows
+                fac = B[:, piv]
+                B = B ^ field.mul(fac[:, None], newrow[None, :])
+                B = B.at[piv].set(newrow)
+                filled = filled.at[piv].set(True)
+                sel = sel.at[count].set(i)
+                return B, filled, sel, count + 1
+
+            return jax.lax.cond(found, pick, lambda a: a,
+                                (B, filled, sel, count))
+
+        state = (
+            jnp.zeros((K, K), jnp.uint8),       # basis B
+            jnp.zeros((K,), jnp.bool_),         # filled pivots
+            jnp.zeros((K,), jnp.int32),         # selected row indices
+            jnp.int32(0),                       # selected count
+        )
+        _, _, sel, count = jax.lax.fori_loop(0, n, body, state)
+        return count == K, sel, count
+
+    return run
+
+
+def incremental_select(A: jnp.ndarray, s: int):
+    """Greedily pick K independent rows of A (n, K) over GF(2^s).
+
+    Returns ``(ok, idx, count)``: `ok` — scalar bool, full column rank
+    reached; `idx` — (K,) int32 selected row indices in scan order
+    (positions >= count are 0-padded, matching the old helper); `count`
+    — number of independent rows found (== rank of A, capped at K).
+    """
+    return _select_fn(s)(A)

@@ -15,11 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fednc as fednc_mod
-from repro.core import packets as pkt
-from repro.core.channel import BlindBoxChannel
+from repro.core.channel import BlindBoxChannel, ChannelReport
 from repro.core.fednc import FedNCConfig, RoundResult
-from repro.core.gf import get_field, rank as gf_rank
-from repro.core.rlnc import EncodedBatch, random_coding_matrix
+from repro.core.rlnc import random_coding_matrix
 
 
 @dataclass
@@ -70,22 +68,17 @@ class FedNCStrategy:
         if isinstance(self.channel, BlindBoxChannel):
             # encode once per emitted packet: the network multicasts
             # fresh combinations; server keeps `budget` of them.
-            rows = []
-            spec = None
-            for p in client_params:
-                sym, spec = pkt.pytree_to_packet(p, s=cfg.s)
-                rows.append(sym)
-            P = pkt.stack_packets(rows)
-            K = len(rows)
+            engine = fednc_mod.engine_for(cfg)
+            P, spec = engine.packetize(client_params)
+            K = P.shape[0]
             n = self.channel.budget
             A = random_coding_matrix(key, n, K, cfg.s)
-            from repro.core.rlnc import encode as rl_encode
-            batch = rl_encode(P, A, cfg.s, impl=cfg.kernel_impl)
-            if int(gf_rank(get_field(cfg.s), batch.A)) < K:
-                from repro.core.channel import ChannelReport
-                return RoundResult(prev_global, False,
-                                   ChannelReport(n, n, False), 0)
-            return fednc_mod.decode_and_aggregate(
+            batch = engine.encode(P, A)
+            # decode_and_aggregate row-selects on-device when n > K and
+            # reports rank failure itself — no host-side rank check.
+            res = fednc_mod.decode_and_aggregate(
                 batch, spec, weights, prev_global, cfg)
+            res.report = ChannelReport(n, n, res.decoded)
+            return res
         return fednc_mod.fednc_round(client_params, weights, prev_global,
                                      cfg, key, channel=self.channel)

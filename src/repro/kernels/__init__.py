@@ -1,8 +1,12 @@
 """Pallas TPU kernels for FedNC's GF(2^s) coding hot-spot.
 
-gf_matmul.py — GF(2^s) coded matmul (clmul formulation, VMEM-tiled)
+gf_matmul.py — GF(2^s) coded matmul: unpacked clmul formulation plus
+               the int32 lane-packed variant (4 symbols/lane), both
+               VMEM-tiled
 gf2_xor.py   — GF(2) masked-XOR fast path (s=1)
-ops.py       — jitted dispatch wrappers (jnp oracle on CPU, Pallas on TPU)
-ref.py       — pure-jnp oracles (table-based; independent formulation)
+ops.py       — compatibility facade over the engine kernel registry
+               (repro.engine.registry owns backend dispatch)
+ref.py       — pure-jnp formulations: table-based oracle + interpret-free
+               clmul/lane-packed mirrors of the kernels
 """
 from . import ops, ref

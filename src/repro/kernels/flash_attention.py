@@ -43,10 +43,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        # NB: the leading batch index must be a Slice, not a python int —
+        # jax 0.4.37's interpret-mode discharge rule rejects scalar
+        # indexers inside pl.load (AttributeError on `.shape`).
+        k = pl.load(k_ref, (pl.dslice(0, 1),
+                            pl.dslice(j * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1),
+                            pl.dslice(j * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                   # (bq, bk)
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(

@@ -1,19 +1,25 @@
 """Jitted public wrappers around the GF coding kernels.
 
-`impl` selects the execution path:
-  * 'jnp'    — table-based jnp oracle (fast on CPU, default here)
+Backend choice is owned by the engine kernel registry
+(repro.engine.registry) — this module is a thin compatibility facade
+over it.  The legacy `impl` strings map 1:1 onto registry names:
+
+  * 'jnp'    — table-based jnp oracle
   * 'pallas' — the Pallas TPU kernel (interpret=True on CPU)
-  * 'auto'   — pallas on TPU backends, jnp elsewhere
+  * 'auto'   — registry default: lane-packed Pallas on TPU, lane-packed
+               jnp elsewhere
+
+plus the newer registry names ('jnp_clmul', 'jnp_packed',
+'pallas_packed', custom registrations) which pass straight through.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
 from .flash_attention import flash_attention
-from .gf_matmul import gf_matmul_pallas
 from .gf2_xor import gf2_matmul_pallas
+from . import ref
 
 
 def _on_tpu() -> bool:
@@ -21,19 +27,9 @@ def _on_tpu() -> bool:
 
 
 def gf_matmul(A, P, *, s: int = 8, impl: str = "auto") -> jnp.ndarray:
-    """C = A·P over GF(2^s); dispatches jnp / Pallas."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "jnp"
-    if impl == "jnp":
-        if s == 1:
-            return ref.gf2_matmul_ref(A, P)
-        return ref.gf_matmul_ref(A, P, s)
-    if impl == "pallas":
-        interpret = not _on_tpu()
-        if s == 1:
-            return gf2_matmul_pallas(A, P, interpret=interpret)
-        return gf_matmul_pallas(A, P, s=s, interpret=interpret)
-    raise ValueError(f"unknown impl {impl!r}")
+    """C = A·P over GF(2^s); dispatches through the engine registry."""
+    from repro.engine.registry import gf_matmul as registry_matmul
+    return registry_matmul(A, P, s=s, kernel=impl)
 
 
 def gf2_combine(A, P, *, impl: str = "auto") -> jnp.ndarray:

@@ -189,6 +189,28 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# coded packets (repro.engine lane parallelism)
+# ---------------------------------------------------------------------------
+
+def replicated_spec(ndim: int) -> P:
+    """All-dims-replicated PartitionSpec (coding matrices: tiny, everywhere)."""
+    return P(*([None] * ndim))
+
+
+def coded_spec(ndim: int, mesh: Mesh, axis: str = "data") -> P:
+    """Spec for coded symbol matrices (..., L): lanes shard on `axis`.
+
+    RLNC mixes clients (rows); every lane (column) is independent, so
+    the engine's shard_map splits L across the mesh with zero
+    communication.  Falls back to full replication when the axis is
+    absent (e.g. the single-device test mesh).
+    """
+    if ndim == 0 or axis not in mesh.axis_names:
+        return replicated_spec(ndim)
+    return P(*([None] * (ndim - 1) + [axis]))
+
+
 def opt_shardings(opt_shapes: Any, mesh: Mesh, params_template: Any
                   ) -> Any:
     """Optimizer slots mirror the parameter tree's specs; step scalar
