@@ -10,7 +10,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_kernels            GF coding kernel throughput
   bench_fl_accuracy        Fig. 3 / Table I col 3 (iid + non-iid)
   bench_scale              Fig. 4 (N=100→200 analogue)
-  bench_collective         mesh FedNC wire cost (from dry-run records)
+  bench_collective         fused hierarchy round (BENCH_hierarchy.json)
+                           + mesh FedNC wire cost (from dry-run records)
+
+See benchmarks/README.md for every suite and JSON field.
 """
 from __future__ import annotations
 

@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Docs drift checker (fast tier; see tests/test_docs.py).
+
+Documentation rots in three ways this script makes impossible:
+
+1. **Dead examples** — every fenced ```python block in README.md and
+   docs/*.md is executed (blocks share one namespace per file, top to
+   bottom, like a fresh REPL session).  A snippet that stops running
+   fails the fast tier.
+2. **Stale registry names** — the kernel names documented between the
+   ``<!-- kernels:begin/end -->`` markers in docs/engine.md must equal
+   ``repro.engine.available_kernels()`` exactly.
+3. **Stale numbers** — the packed-vs-unpacked throughput table in
+   README.md must be byte-identical to the one this script regenerates
+   from BENCH_kernels.json (``python scripts/check_docs.py --table``
+   prints it for pasting after a bench re-run).
+
+Exit code 0 = docs match the code.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DOC_FILES = ("README.md", "docs/engine.md", "benchmarks/README.md")
+FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+KERNEL_MARK_RE = re.compile(
+    r"<!--\s*kernels:begin\s*-->(.*?)<!--\s*kernels:end\s*-->", re.DOTALL)
+
+
+def fenced_blocks(text: str) -> list[tuple[str, str]]:
+    """[(language, body)] for every fenced code block, in order."""
+    return [(m.group(1), m.group(2)) for m in FENCE_RE.finditer(text)]
+
+
+def kernel_table(json_path: pathlib.Path) -> list[str]:
+    """The README throughput table, regenerated from BENCH_kernels.json."""
+    bench = json.loads(json_path.read_text())
+    lanes = sorted({v["L"] for k, v in bench.items()
+                    if k.startswith("gf_encode_") and v.get("s") == 8
+                    and v.get("K") == 10})
+    lines = [
+        "| L (symbols) | `jnp` Msym/s | `jnp_clmul` Msym/s "
+        "| `jnp_packed` Msym/s | packed / unpacked |",
+        "|---:|---:|---:|---:|---:|",
+    ]
+    for L in lanes:
+        cells = [f"{L:,}"]
+        for kern in ("jnp", "jnp_clmul", "jnp_packed"):
+            r = bench[f"gf_encode_{kern}_s8_K10_L{L}"]
+            cells.append(f"{r['symbols_per_s'] / 1e6:.0f}")
+        speedup = bench[f"packed_vs_unpacked_speedup_L{L}"]["x"]
+        cells.append(f"{speedup:.2f}x")
+        lines.append("| " + " | ".join(cells) + " |")
+    return lines
+
+
+def check_python_blocks(path: pathlib.Path) -> list[str]:
+    """Execute the file's ```python blocks; return failure messages."""
+    errors = []
+    ns: dict = {"__name__": f"docs_exec_{path.stem}"}
+    for i, (lang, body) in enumerate(fenced_blocks(path.read_text())):
+        if lang != "python":
+            continue
+        try:
+            exec(compile(body, f"{path}#block{i}", "exec"), ns)
+        except Exception as e:
+            errors.append(f"{path}: python block {i} raised "
+                          f"{type(e).__name__}: {e}")
+    return errors
+
+
+def check_kernel_names(path: pathlib.Path) -> list[str]:
+    """Registry names documented in `path` == the live registry."""
+    from repro.engine import available_kernels
+    m = KERNEL_MARK_RE.search(path.read_text())
+    if not m:
+        return [f"{path}: missing <!-- kernels:begin/end --> markers"]
+    documented = set(re.findall(r"`([\w]+)`", m.group(1)))
+    live = set(available_kernels())
+    if documented != live:
+        return [f"{path}: documented kernels {sorted(documented)} != "
+                f"registry {sorted(live)}"]
+    return []
+
+
+def check_bench_table(readme: pathlib.Path,
+                      bench_json: pathlib.Path) -> list[str]:
+    """README throughput table lines match BENCH_kernels.json."""
+    if not bench_json.exists():
+        return [f"{bench_json} missing (run "
+                "`PYTHONPATH=src python -m benchmarks.bench_kernels`)"]
+    text = readme.read_text()
+    missing = [ln for ln in kernel_table(bench_json) if ln not in text]
+    if missing:
+        return [f"{readme}: stale/missing throughput table rows "
+                f"(regenerate with `python scripts/check_docs.py "
+                f"--table`):\n  " + "\n  ".join(missing)]
+    return []
+
+
+def main() -> int:
+    errors: list[str] = []
+    # names first: executing docs/engine.md's register_kernel example
+    # mutates the live registry for this process
+    errors += check_kernel_names(ROOT / "docs" / "engine.md")
+    errors += check_bench_table(ROOT / "README.md",
+                                ROOT / "BENCH_kernels.json")
+    for rel in DOC_FILES:
+        path = ROOT / rel
+        if not path.exists():
+            errors.append(f"{path} does not exist")
+            continue
+        errors += check_python_blocks(path)
+    for e in errors:
+        print(f"check_docs: FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({', '.join(DOC_FILES)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    if "--table" in sys.argv:
+        print("\n".join(kernel_table(ROOT / "BENCH_kernels.json")))
+        sys.exit(0)
+    sys.exit(main())

@@ -19,6 +19,16 @@ are simulated explicitly:
 All models operate on `EncodedBatch` (or plain packet matrices for the
 FedAvg baseline) and use numpy RNG host-side — channel simulation is
 control flow, not device math.
+
+Channels whose effect is *linear in the row space* additionally expose
+``plan_transform(n, s)``: the channel's whole action on n transmitted
+tuples, decided up front (consuming exactly the same host RNG draws as
+``transmit_encoded``) and returned as a :class:`RowGather` (erasures —
+which rows survive) or :class:`RowMix` (recoding relays — the composed
+mixing matrix).  The plan only touches the tiny row space, never the
+L-sized payload, which lets `repro.engine.CodingEngine` fold the
+channel into its chunk-streamed encode→decode dispatch instead of
+materializing the full coded payload between stages.
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .gf import get_field, rank as gf_rank
-from .rlnc import EncodedBatch, recode
+from .rlnc import EncodedBatch
 
 
 @dataclass
@@ -41,6 +51,19 @@ class ChannelReport:
     distinct_sources: int = -1      # FedAvg bookkeeping under blind box
 
 
+@dataclass(frozen=True)
+class RowGather:
+    """Channel plan: rows `idx` (host int array) survive, in order."""
+    idx: np.ndarray
+
+
+@dataclass(frozen=True)
+class RowMix:
+    """Channel plan: received tuples are R·(A, C) — a linear mix of the
+    sent ones (network-interior recoding, Prop. 2)."""
+    R: jnp.ndarray
+
+
 class ErasureChannel:
     """IID packet erasures with probability `p_erase`."""
 
@@ -48,10 +71,15 @@ class ErasureChannel:
         self.p_erase = float(p_erase)
         self.rng = np.random.default_rng(seed)
 
+    def plan_transform(self, n: int, s: int) -> RowGather:
+        """Decide the erasure pattern for n tuples (one RNG draw, the
+        same stream `transmit_encoded` consumes)."""
+        keep = self.rng.random(n) >= self.p_erase
+        return RowGather(np.nonzero(keep)[0])
+
     def transmit_encoded(self, batch: EncodedBatch, s: int
                          ) -> tuple[EncodedBatch, ChannelReport]:
-        keep = self.rng.random(batch.n) >= self.p_erase
-        idx = np.nonzero(keep)[0]
+        idx = self.plan_transform(batch.n, s).idx
         out = batch[jnp.asarray(idx, jnp.int32)]
         dec = (len(idx) >= batch.K and
                int(gf_rank(get_field(s), out.A)) == batch.K)
@@ -115,24 +143,37 @@ class MultiHopChannel:
         self.eta = int(eta)
         self.rng = np.random.default_rng(seed)
 
-    def transmit_encoded(self, batch: EncodedBatch, s: int, key=None
-                         ) -> tuple[EncodedBatch, ChannelReport]:
-        """η sequential recodes.  By linearity the hops compose:
-        A' = (R_η···R_1)A, C' = (R_η···R_1)C — so the tiny n×n recode
-        matrices are composed first and the (huge) payload is
-        transformed once.  Bit-identical to hop-by-hop recoding."""
+    def plan_transform(self, n: int, s: int) -> RowMix:
+        """Compose the η hop matrices into one n×n mix (tiny, O(η·n³)
+        field ops; the L-sized payload is untouched).  Consumes the
+        same single host RNG draw as `transmit_encoded`."""
         import jax
         field = get_field(s)
         base = int(self.rng.integers(0, 2**31 - 1))
-        n = batch.n
         R_comp = jnp.eye(n, dtype=jnp.uint8)
         for h in range(self.eta):
             R = field.random_elements(jax.random.PRNGKey(base + h),
                                       (n, n))
             R_comp = field.matmul(R, R_comp)
-        out = EncodedBatch(A=field.matmul(R_comp, batch.A),
-                           C=field.matmul(R_comp, batch.C))
-        dec = int(gf_rank(field, out.A)) == batch.K
+        return RowMix(R_comp)
+
+    def transmit_encoded(self, batch: EncodedBatch, s: int, key=None,
+                         engine=None) -> tuple[EncodedBatch, ChannelReport]:
+        """η sequential recodes.  By linearity the hops compose:
+        A' = (R_η···R_1)A, C' = (R_η···R_1)C — so the tiny n×n recode
+        matrices are composed first (plan_transform) and the (huge)
+        payload is recoded once through the engine's chunk-streamed
+        kernel.  Bit-identical to hop-by-hop recoding.
+
+        Pass `engine` to recode through a configured CodingEngine
+        (kernel pin, chunking, mesh); the default resolves the 'auto'
+        kernel for GF(2^s)."""
+        if engine is None:
+            from repro.engine import EngineConfig, get_engine
+            engine = get_engine(EngineConfig(s=s))
+        R_comp = self.plan_transform(batch.n, s).R
+        out = engine.recode_with(R_comp, batch)
+        dec = int(gf_rank(get_field(s), out.A)) == batch.K
         return out, ChannelReport(batch.n, out.n, dec)
 
 

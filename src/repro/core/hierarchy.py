@@ -16,6 +16,13 @@ Benefits over flat FedNC, all testable here:
   * an edge can emit spare combinations (n_e > K_e) so WAN erasures
     are repaired without re-contacting clients;
   * eavesdroppers on the WAN face the same rank-K wall.
+
+This module is a thin adapter over
+:meth:`repro.engine.CodingEngine.multi_edge_round`, which runs the
+whole edge tier — E local encodes, the WAN channel, and the decode —
+as ONE fused chunk-streamed dispatch in the global coding-vector
+space.  `per_edge_round_reference` keeps the historical E-dispatch
+path as the bit-exactness oracle and benchmark baseline.
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import packets as pkt
-from .fednc import FedNCConfig, RoundResult, decode_and_aggregate, engine_for
+from .fednc import FedNCConfig, RoundResult, _aggregate, engine_for
 from .gf import get_field
 from .rlnc import EncodedBatch
 
@@ -56,18 +63,20 @@ def edge_encode(P: jnp.ndarray, edge: EdgeGroup, K: int, n_out: int,
     return EncodedBatch(A=A_global, C=C)
 
 
-def hierarchical_fednc_round(client_params: Sequence[Any],
-                             weights: Sequence[float],
-                             prev_global: Any,
+def per_edge_round_reference(P: jnp.ndarray, edges: Sequence[EdgeGroup],
                              cfg: FedNCConfig, key, *,
-                             num_edges: int = 2,
                              spare_per_edge: int = 0,
-                             wan_channel=None) -> RoundResult:
-    """Full hierarchical round: client -> edge encode -> WAN -> server."""
-    K = len(client_params)
-    P, spec = pkt.pytrees_to_packets(client_params, s=cfg.s)
+                             wan_channel=None):
+    """The historical E-dispatch path: one engine `encode` re-entry per
+    edge, stage-wise WAN, stage-wise decode.
 
-    edges = partition_edges(K, num_edges)
+    Kept as the bit-exactness oracle (and benchmark baseline) for the
+    engine's fused :meth:`~repro.engine.CodingEngine.multi_edge_round`;
+    consumes the identical PRNG/host-RNG streams.  Returns an
+    EngineRound-shaped (ok, P_hat, report) triple."""
+    from repro.engine.engine import EngineRound
+    K = P.shape[0]
+    engine = engine_for(cfg)
     batches = []
     for e, edge in enumerate(edges):
         n_out = len(edge.client_ids) + spare_per_edge
@@ -81,10 +90,43 @@ def hierarchical_fednc_round(client_params: Sequence[Any],
     if wan_channel is not None:
         combined, report = wan_channel.transmit_encoded(combined, cfg.s)
         if not report.decodable:
-            return RoundResult(prev_global, False, report, 0)
+            return EngineRound(False, None, report)
+    if combined.n < K:
+        return EngineRound(False, None, report)
+    ok, P_hat = engine.decode(combined)
+    return EngineRound(bool(ok), P_hat, report)
 
-    # decode_and_aggregate row-selects on-device when n > K and skips
-    # the round itself when the combined matrix is rank-deficient.
-    res = decode_and_aggregate(combined, spec, weights, prev_global, cfg)
-    res.report = report
-    return res
+
+def hierarchical_fednc_round(client_params: Sequence[Any],
+                             weights: Sequence[float],
+                             prev_global: Any,
+                             cfg: FedNCConfig, key, *,
+                             num_edges: int = 2,
+                             spare_per_edge: int = 0,
+                             wan_channel=None,
+                             fused: bool = True) -> RoundResult:
+    """Full hierarchical round: client -> edge encode -> WAN -> server.
+
+    Thin adapter over the engine: the default fused path runs the whole
+    edge tier as ONE chunk-streamed dispatch
+    (:meth:`repro.engine.CodingEngine.multi_edge_round`); ``fused=False``
+    runs the per-edge reference (E engine re-entries + stage-wise WAN),
+    bit-identical by construction — both draw edge e's mixing matrix
+    from ``fold_in(key, e)`` and the WAN plan from the same host RNG.
+    """
+    K = len(client_params)
+    P, spec = pkt.pytrees_to_packets(client_params, s=cfg.s)
+    edges = partition_edges(K, num_edges)
+    engine = engine_for(cfg)
+    if fused:
+        out = engine.multi_edge_round(
+            P, key, [edge.client_ids for edge in edges],
+            spare_per_edge=spare_per_edge, wan_channel=wan_channel)
+    else:
+        out = per_edge_round_reference(
+            P, edges, cfg, key, spare_per_edge=spare_per_edge,
+            wan_channel=wan_channel)
+    if not out.ok:
+        return RoundResult(prev_global, False, out.report, 0)
+    agg = _aggregate(out.packets, spec, weights, cfg)
+    return RoundResult(agg, True, out.report, K)

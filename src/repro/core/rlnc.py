@@ -94,13 +94,18 @@ def systematic_coding_matrix(key, n: int, K: int, s: int) -> jnp.ndarray:
     return jnp.concatenate([eye, extra], axis=0)
 
 
-def recode(batch: EncodedBatch, key, n_out: int, s: int) -> EncodedBatch:
+def recode(batch: EncodedBatch, key, n_out: int, s: int,
+           *, impl: str = "auto") -> EncodedBatch:
     """Relay recoding: emit n_out fresh random combinations of the
-    received tuples.  New coding vectors compose linearly: A' = R·A."""
-    field = get_field(s)
-    R = field.random_elements(key, (n_out, batch.n))
-    return EncodedBatch(A=field.matmul(R, batch.A),
-                        C=field.matmul(R, batch.C))
+    received tuples.  New coding vectors compose linearly: A' = R·A.
+
+    Thin adapter over :meth:`repro.engine.CodingEngine.recode` — the
+    mixing products run chunk-streamed through the registry kernel
+    named by `impl` (same names as :func:`encode`), bit-identical to
+    the historical host-side field.matmul."""
+    from repro.engine import EngineConfig, get_engine  # late: avoids cycle
+    return get_engine(EngineConfig(s=s, kernel=impl)).recode(batch, key,
+                                                             n_out)
 
 
 def decodable(batch: EncodedBatch, s: int) -> jnp.ndarray:

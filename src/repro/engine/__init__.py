@@ -2,11 +2,15 @@
 
 engine.py   — EngineConfig + CodingEngine: batched packetization,
               chunk-streamed encode/decode, jit-safe selection,
-              shard_map lane parallelism, the full round pipeline.
+              shard_map lane parallelism, relay recoding, and the
+              fused round pipelines (`round`, `multi_edge_round`) that
+              fold channel simulation into the encode/decode stream.
 registry.py — named kernel registry (single dispatch point replacing
               the impl="auto"|"jnp"|"pallas" strings of the seed).
 select.py   — incremental-GE independent-row selector (on-device
               replacement for the host-side numpy greedy loop).
+
+See docs/engine.md for the architecture guide.
 """
 from .engine import (CodingEngine, DEFAULT_CHUNK_L, EngineConfig,
                      EngineRound, get_engine)

@@ -23,6 +23,14 @@ end to end as one jit-first, chunked, multi-device program:
 * **multi-device lanes** — given a mesh (launch.mesh), the kernel is
   wrapped in `shard_map` sharding L across the configured axis; lanes
   are embarrassingly parallel, so there is no communication.
+* **fused channels and recoding** — channels that expose their action
+  on the row space (`plan_transform` -> RowGather/RowMix) are folded
+  into the stream: the erasure pattern / composed relay mix is decided
+  on the tiny (n, K) coding matrix first, then encode, channel, and
+  decode run as ONE chunk-streamed dispatch.  `recode()` is the
+  network-interior relay operation (Prop. 2), and `multi_edge_round()`
+  runs the whole hierarchical topology (paper §III) as a single fused
+  dispatch in the global coding-vector space.
 
 `core.fednc.fednc_round`, the federation strategies, and
 `core.hierarchy` are thin adapters over this class.
@@ -37,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packets as pkt
+from repro.core.channel import ChannelReport, RowGather, RowMix
 from repro.core.gf import get_field, invert
 from repro.core.rlnc import EncodedBatch
 from .defaults import DEFAULT_CHUNK_L
@@ -76,6 +85,9 @@ class CodingEngine:
         self.kernel_name, self._kernel = resolve_kernel(config.kernel)
         self.field = get_field(config.s)
         self._dispatch: Optional[tuple] = None   # built lazily, once
+        # L-sized kernel dispatches issued so far (monotonic; benchmarks
+        # diff it around a round to count dispatches per round)
+        self.dispatch_count = 0
 
     # -- packetization ----------------------------------------------------
 
@@ -160,6 +172,7 @@ class CodingEngine:
             return jnp.zeros((n_out, 0), jnp.uint8)
 
         def mm(M, X):
+            self.dispatch_count += 1
             return kernel(M, X, s=s) if shards == 1 else kernel(M, X)
 
         cl, nc = self._chunks(L)
@@ -179,9 +192,57 @@ class CodingEngine:
     # -- pipeline stages --------------------------------------------------
 
     def encode(self, P: jnp.ndarray, A: jnp.ndarray) -> EncodedBatch:
-        """C = A·P as an EncodedBatch (chunk-streamed)."""
+        """C = A·P as an EncodedBatch (chunk-streamed).
+
+        P is the (K, L) packet matrix (K clients, L symbols each), A an
+        (n, K) coding matrix over GF(2^s) — usually from
+        :meth:`coding_matrix`.
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> A = eng.coding_matrix(jax.random.PRNGKey(0), n=3, K=3)
+        >>> batch = eng.encode(P, A)
+        >>> batch.A.shape, batch.C.shape
+        ((3, 3), (3, 4))
+        """
         return EncodedBatch(A=jnp.asarray(A, jnp.uint8),
                             C=self.matmul(A, P))
+
+    def recode(self, batch: EncodedBatch, key, n_out: int) -> EncodedBatch:
+        """Relay recoding (paper Prop. 2): emit `n_out` fresh random
+        combinations of the received tuples without decoding.
+
+        The relay draws R (n_out, n) over GF(2^s) and forwards
+        (R·A, R·C); coding vectors compose linearly, so downstream
+        decoders treat the result exactly like first-hop tuples.  Both
+        products run through the registry kernel, chunk-streamed
+        (`recode_with` for a caller-supplied R).
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> batch = eng.encode(P, eng.coding_matrix(jax.random.PRNGKey(0), 3, 3))
+        >>> relay = eng.recode(batch, jax.random.PRNGKey(1), n_out=4)
+        >>> relay.A.shape, relay.C.shape          # 4 fresh combinations
+        ((4, 3), (4, 4))
+        >>> ok, P_hat = eng.decode(relay)         # still decodes to P
+        >>> bool(ok) and (P_hat == P).all().item()
+        True
+        """
+        R = self.field.random_elements(key, (n_out, batch.n))
+        return self.recode_with(R, batch)
+
+    def recode_with(self, R: jnp.ndarray, batch: EncodedBatch
+                    ) -> EncodedBatch:
+        """Recode with an explicit mixing matrix: (R·A, R·C).
+
+        η sequential hops compose by linearity — recoding with
+        R_η···R_1 (one call) is bit-identical to η calls in sequence;
+        `core.channel.MultiHopChannel` relies on exactly that."""
+        R = jnp.asarray(R, jnp.uint8)
+        return EncodedBatch(A=self.matmul(R, batch.A),
+                            C=self.matmul(R, batch.C))
 
     def select(self, batch: EncodedBatch
                ) -> tuple[jnp.ndarray, EncodedBatch]:
@@ -196,6 +257,14 @@ class CodingEngine:
         GF arithmetic is exact, so inverting the (tiny) K x K coding
         matrix and streaming A^-1·C chunk-wise is bit-identical to the
         seed's monolithic Gaussian elimination over [A | C].
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> batch = eng.encode(P, eng.coding_matrix(jax.random.PRNGKey(0), 5, 3))
+        >>> ok, P_hat = eng.decode(batch[jnp.array([0, 2, 4])])  # 2 erased
+        >>> bool(ok) and (P_hat == P).all().item()
+        True
         """
         K = batch.K
         if batch.n < K:
@@ -208,30 +277,15 @@ class CodingEngine:
             return False, None
         return True, self.matmul(A_inv, batch.C)
 
-    # -- the full round ---------------------------------------------------
+    # -- fused round internals --------------------------------------------
 
-    def round(self, P: jnp.ndarray, key, channel=None) -> EngineRound:
-        """encode -> (channel) -> select -> decode for one packet matrix.
-
-        Ideal channel (None): the coding matrix is drawn, selected, and
-        inverted *before* any L-sized work, then encode and decode of
-        each chunk are interleaved in one stream — decode of chunk i
-        overlaps encode of chunk i+1, and a singular draw costs O(K^3),
-        not O(K·L).  Bit-exact vs. the jnp-oracle reference path.
-        """
-        K, L = P.shape
-        n = K + self.config.extra_tuples
-        A = self.coding_matrix(key, n, K)
-
-        if channel is not None:
-            batch = self.encode(P, A)
-            batch, report = channel.transmit_encoded(batch, self.config.s)
-            if not report.decodable:
-                return EngineRound(False, None, report)
-            ok, P_hat = self.decode(batch)
-            return EngineRound(bool(ok), P_hat, report)
-
-        # ideal path: resolve invertibility on the K-sized problem first
+    def _fused_ideal_round(self, P: jnp.ndarray, A: jnp.ndarray
+                           ) -> EngineRound:
+        """Lossless-delivery tail: resolve invertibility on the tiny
+        (n, K) problem, then stream A_inv·(A_sel·P) in one dispatch."""
+        n, K = A.shape
+        if n < K:
+            return EngineRound(False, None, None)
         ok = jnp.bool_(True)
         if n > K:
             ok, idx, _ = incremental_select(A, self.config.s)
@@ -246,6 +300,151 @@ class CodingEngine:
         # and A_inv·(A_sel·P) is the exact decode.
         P_hat = self._stream(A_sel, P, A_post=A_inv)
         return EngineRound(True, P_hat, None)
+
+    def _fused_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
+                             channel) -> EngineRound:
+        """encode -> channel -> select -> decode as ONE streamed dispatch.
+
+        The channel's `plan_transform` yields its whole action on the
+        row space (RowGather erasure pattern / RowMix relay matrix), so
+        delivery, selection, and inversion are all resolved on (n, K)-
+        sized matrices first.  The L-sized payload then flows through a
+        single `_stream` whose A_post composes channel and decode:
+        channel simulation overlaps the decode of every chunk, and the
+        full coded payload is never materialized between stages.  GF
+        algebra is exact and associative, so the result is bit-identical
+        to the stage-wise reference.
+        """
+        n, K = A.shape
+        s = self.config.s
+        plan = channel.plan_transform(n, s)
+        if isinstance(plan, RowGather):
+            delivered = int(len(plan.idx))
+            if delivered < K:
+                return EngineRound(False, None,
+                                   ChannelReport(n, delivered, False))
+            idx = jnp.asarray(plan.idx, jnp.int32)
+            A_rx = A[idx]
+        elif isinstance(plan, RowMix):
+            delivered = int(plan.R.shape[0])
+            A_rx = self.field.matmul(plan.R, A)
+        else:
+            raise TypeError(
+                f"unsupported channel plan {type(plan).__name__}")
+        ok, sel, _ = incremental_select(A_rx, s)
+        report = ChannelReport(n, delivered, bool(ok))
+        if not bool(ok):
+            return EngineRound(False, None, report)
+        _, A_inv = invert(self.field, A_rx[sel])   # sel rows independent
+        if isinstance(plan, RowGather):
+            A_enc, A_post = A[idx[sel]], A_inv
+        else:
+            A_enc, A_post = A, self.field.matmul(A_inv, plan.R[sel])
+        P_hat = self._stream(A_enc, P, A_post=A_post)
+        return EngineRound(True, P_hat, report)
+
+    def _stagewise_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
+                                 channel) -> EngineRound:
+        """Fallback for channels without `plan_transform`: materialize
+        the coded payload and run the stages in order."""
+        batch = self.encode(P, A)
+        batch, report = channel.transmit_encoded(batch, self.config.s)
+        if not report.decodable:
+            return EngineRound(False, None, report)
+        ok, P_hat = self.decode(batch)
+        return EngineRound(bool(ok), P_hat, report)
+
+    def _run_round(self, P: jnp.ndarray, A: jnp.ndarray,
+                   channel) -> EngineRound:
+        """Shared channel-dispatch tail of `round`/`multi_edge_round`."""
+        if channel is None:
+            return self._fused_ideal_round(P, A)
+        if hasattr(channel, "plan_transform"):
+            return self._fused_channel_round(P, A, channel)
+        return self._stagewise_channel_round(P, A, channel)
+
+    # -- the full round ---------------------------------------------------
+
+    def round(self, P: jnp.ndarray, key, channel=None) -> EngineRound:
+        """encode -> (channel) -> select -> decode for one packet matrix.
+
+        Ideal channel (None): the coding matrix is drawn, selected, and
+        inverted *before* any L-sized work, then encode and decode of
+        each chunk are interleaved in one stream — decode of chunk i
+        overlaps encode of chunk i+1, and a singular draw costs O(K^3),
+        not O(K·L).  Channels exposing `plan_transform` (erasure,
+        multi-hop recode) are fused the same way; others fall back to
+        the stage-wise path.  Bit-exact vs. the jnp-oracle reference.
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> out = eng.round(P, jax.random.PRNGKey(0))
+        >>> out.ok and (out.packets == P).all().item()
+        True
+        """
+        K, L = P.shape
+        n = K + self.config.extra_tuples
+        A = self.coding_matrix(key, n, K)
+        return self._run_round(P, A, channel)
+
+    # -- the fused hierarchical round (paper §III) ------------------------
+
+    def multi_edge_coding_matrix(self, key, edges: Sequence[Sequence[int]],
+                                 K: int, n_out: Sequence[int]
+                                 ) -> jnp.ndarray:
+        """Stacked global-space coding matrix of a whole edge tier.
+
+        Edge e (serving clients `edges[e]`, a subset of range(K)) draws
+        its (n_out[e], K_e) local mixing matrix with
+        ``jax.random.fold_in(key, e)`` — the same stream the per-edge
+        reference consumes — and its rows are embedded at that edge's
+        client columns of the global K-wide coding-vector space.  Rows
+        of different edges never overlap in support, so the stack is
+        the block-structured matrix of paper §III's hierarchy.
+        """
+        blocks = []
+        for e, ids in enumerate(edges):
+            cols = jnp.asarray(tuple(int(i) for i in ids), jnp.int32)
+            A_local = self.field.random_elements(
+                jax.random.fold_in(key, e), (int(n_out[e]), len(ids)))
+            A_g = jnp.zeros((int(n_out[e]), K), jnp.uint8)
+            blocks.append(A_g.at[:, cols].set(A_local))
+        return jnp.concatenate(blocks, axis=0)
+
+    def multi_edge_round(self, P: jnp.ndarray, key,
+                         edges: Sequence[Sequence[int]], *,
+                         spare_per_edge: int = 0,
+                         wan_channel=None) -> EngineRound:
+        """One fused hierarchical round: E edge encodes + WAN + decode.
+
+        Instead of E separate `encode` re-entries (one per edge server)
+        followed by a stage-wise channel and decode, the whole topology
+        becomes one dispatch: every edge's local encode is a row block
+        of :meth:`multi_edge_coding_matrix` in the global coding-vector
+        space, the WAN channel (erasures / multi-hop recoding) is
+        planned on the row space, and the single chunk-streamed
+        `_stream` call runs encode, channel, and decode per chunk —
+        decode of chunk i overlaps encode of chunk i+1.  Bit-exact vs.
+        the per-edge reference (`core.hierarchy`, fused=False).
+
+        `edges` lists each edge server's client indices (a partition of
+        range(K)); each edge emits K_e + `spare_per_edge` combinations,
+        so WAN erasures are repaired without re-contacting clients.
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> out = eng.multi_edge_round(P, jax.random.PRNGKey(0),
+        ...                            edges=[(0, 1), (2,)],
+        ...                            spare_per_edge=1)
+        >>> out.ok and (out.packets == P).all().item()
+        True
+        """
+        K, L = P.shape
+        n_out = [len(ids) + spare_per_edge for ids in edges]
+        A = self.multi_edge_coding_matrix(key, edges, K, n_out)
+        return self._run_round(P, A, wan_channel)
 
 
 @functools.lru_cache(maxsize=None)

@@ -46,7 +46,17 @@ def register_kernel(name: str, fn: KernelFn, *,
     """Register a coded-matmul backend under `name`.
 
     `fn(A, P, *, s)` must return A·P over GF(2^s) as (n, L) uint8,
-    bit-exact against the `jnp` table oracle.
+    bit-exact against the `jnp` table oracle.  Registration is
+    process-global; see docs/engine.md for a worked custom-backend
+    example (kept out of this doctest so doctest runs never mutate the
+    live registry).
+
+    >>> "jnp_packed" in available_kernels()   # built-ins pre-registered
+    True
+    >>> register_kernel("auto", print)
+    Traceback (most recent call last):
+        ...
+    ValueError: 'auto' is a reserved alias
     """
     if name == "auto":
         raise ValueError("'auto' is a reserved alias")
@@ -83,7 +93,14 @@ def resolve_kernel(name: str) -> tuple[str, KernelFn]:
 
 
 def gf_matmul(A, P, *, s: int = 8, kernel: str = "auto") -> jnp.ndarray:
-    """Convenience: one-shot registry-dispatched C = A·P."""
+    """Convenience: one-shot registry-dispatched C = A·P.
+
+    >>> import jax.numpy as jnp
+    >>> A = jnp.array([[1, 2]], dtype=jnp.uint8)
+    >>> P = jnp.array([[5], [7]], dtype=jnp.uint8)
+    >>> int(gf_matmul(A, P, s=8, kernel="jnp")[0, 0])   # 5 ^ (2·7)
+    11
+    """
     return resolve_kernel(kernel)[1](A, P, s=s)
 
 

@@ -82,5 +82,13 @@ def incremental_select(A: jnp.ndarray, s: int):
     reached; `idx` — (K,) int32 selected row indices in scan order
     (positions >= count are 0-padded, matching the old helper); `count`
     — number of independent rows found (== rank of A, capped at K).
+
+    Row 1 below is 2·row 0 over GF(2^8), so the selector skips it:
+
+    >>> import jax.numpy as jnp
+    >>> A = jnp.array([[1, 0], [2, 0], [0, 3]], dtype=jnp.uint8)
+    >>> ok, idx, count = incremental_select(A, 8)
+    >>> bool(ok), idx.tolist(), int(count)
+    (True, [0, 2], 2)
     """
     return _select_fn(s)(A)

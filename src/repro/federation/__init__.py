@@ -1,9 +1,10 @@
 """FL substrate: local training, server strategies, round orchestration."""
 from .client import LocalTrainer
 from .rounds import FLExperiment, RoundLog, run_experiment
-from .server import FedAvgStrategy, FedNCStrategy
+from .server import (FedAvgStrategy, FedNCStrategy,
+                     HierarchicalFedNCStrategy)
 
 __all__ = [
     "LocalTrainer", "FLExperiment", "RoundLog", "run_experiment",
-    "FedAvgStrategy", "FedNCStrategy",
+    "FedAvgStrategy", "FedNCStrategy", "HierarchicalFedNCStrategy",
 ]

@@ -82,3 +82,30 @@ class FedNCStrategy:
             return res
         return fednc_mod.fednc_round(client_params, weights, prev_global,
                                      cfg, key, channel=self.channel)
+
+
+@dataclass
+class HierarchicalFedNCStrategy:
+    """Hierarchical FedNC (paper §III): clients upload to trusted edge
+    servers, each edge emits K_e + `spare_per_edge` random combinations
+    in the global coding-vector space, and the central server decodes
+    the WAN-delivered stack.
+
+    Thin adapter over the engine's fused
+    :meth:`~repro.engine.CodingEngine.multi_edge_round` — the whole
+    edge tier is one chunk-streamed dispatch, not E re-entries."""
+
+    config: FedNCConfig = field(default_factory=FedNCConfig)
+    num_edges: int = 2
+    spare_per_edge: int = 0
+    channel: Any = None           # the WAN hop (edge -> central server)
+
+    def aggregate(self, client_params: Sequence[Any],
+                  weights: Sequence[float], prev_global: Any,
+                  rng: np.random.Generator) -> RoundResult:
+        from repro.core.hierarchy import hierarchical_fednc_round
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        return hierarchical_fednc_round(
+            client_params, weights, prev_global, self.config, key,
+            num_edges=self.num_edges, spare_per_edge=self.spare_per_edge,
+            wan_channel=self.channel)

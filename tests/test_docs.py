@@ -1,0 +1,25 @@
+"""Docs stay true (fast tier): scripts/check_docs.py must pass.
+
+The checker executes every fenced ```python block in README.md,
+docs/engine.md, and benchmarks/README.md, verifies the documented
+kernel-registry names against `repro.engine.available_kernels()`, and
+diffs the README throughput table against BENCH_kernels.json.  Run in
+a subprocess so its registry mutations (the register_kernel example)
+and doc-snippet namespaces never leak into this test process.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_check_docs_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True, timeout=600, cwd=ROOT, env=env)
+    assert proc.returncode == 0, (
+        f"docs drifted from the code:\n{proc.stderr}\n{proc.stdout}")

@@ -1,0 +1,229 @@
+"""Engine-side recoding + the fused multi-edge hierarchy round.
+
+Two invariants anchor this layer:
+
+* recoding composes linearly (Prop. 2): η sequential relay recodes are
+  bit-identical to ONE recode with the product mixing matrix;
+* `CodingEngine.multi_edge_round` — the whole edge tier as one fused
+  chunk-streamed dispatch — is bit-exact vs the per-edge reference
+  path for every edge count, spare budget, and WAN channel, while
+  issuing strictly fewer L-sized kernel dispatches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hierarchy, rlnc
+from repro.core.channel import ErasureChannel, MultiHopChannel
+from repro.core.fednc import FedNCConfig
+from repro.core.gf import get_field
+from repro.engine import CodingEngine, EngineConfig
+
+
+def _engine(chunk_l=128):
+    return CodingEngine(EngineConfig(s=8, kernel="jnp_packed",
+                                     chunk_l=chunk_l))
+
+
+# ---------------------------------------------------------------------------
+# recode: linear composition (Prop. 2's η-hop relay)
+# ---------------------------------------------------------------------------
+
+def test_recode_composes_linearly_fixed():
+    """η sequential recodes ≡ one recode with the product matrix."""
+    s, K, L, eta = 8, 5, 333, 4
+    f = get_field(s)
+    eng = _engine()
+    P = f.random_elements(jax.random.PRNGKey(0), (K, L))
+    batch = eng.encode(P, eng.coding_matrix(jax.random.PRNGKey(1), K, K))
+
+    hops = [f.random_elements(jax.random.PRNGKey(10 + h), (K, K))
+            for h in range(eta)]
+    seq = batch
+    for R in hops:
+        seq = eng.recode_with(R, seq)
+    prod = jnp.eye(K, dtype=jnp.uint8)
+    for R in hops:
+        prod = f.matmul(R, prod)            # R_eta ··· R_1
+    once = eng.recode_with(prod, batch)
+    np.testing.assert_array_equal(np.asarray(seq.A), np.asarray(once.A))
+    np.testing.assert_array_equal(np.asarray(seq.C), np.asarray(once.C))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(K=st.integers(2, 6), eta=st.integers(1, 4),
+           seed=st.integers(0, 2**16))
+    def test_recode_composition_property(K, eta, seed):
+        """Property form: random shapes/hop counts, and the composed
+        batch still satisfies the relay invariant C' = A'·P."""
+        s, L = 8, 64
+        f = get_field(s)
+        eng = _engine(chunk_l=32)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        P = f.random_elements(k1, (K, L))
+        batch = eng.encode(P, eng.coding_matrix(k2, K + 1, K))
+
+        seq = batch
+        prod = jnp.eye(batch.n, dtype=jnp.uint8)
+        for h in range(eta):
+            kh = jax.random.fold_in(jax.random.PRNGKey(seed), h)
+            R = f.random_elements(kh, (batch.n, seq.n))
+            seq = eng.recode_with(R, seq)
+            prod = f.matmul(R, prod)
+        once = eng.recode_with(prod, batch)
+        np.testing.assert_array_equal(np.asarray(seq.A),
+                                      np.asarray(once.A))
+        np.testing.assert_array_equal(np.asarray(seq.C),
+                                      np.asarray(once.C))
+        # relay invariant: the composed tuples still encode P
+        np.testing.assert_array_equal(np.asarray(f.matmul(seq.A, P)),
+                                      np.asarray(seq.C))
+
+
+def test_engine_recode_matches_rlnc_adapter():
+    """rlnc.recode is a thin adapter: same draw, same bytes."""
+    s, K, L = 8, 4, 100
+    f = get_field(s)
+    eng = _engine()
+    P = f.random_elements(jax.random.PRNGKey(2), (K, L))
+    batch = eng.encode(P, eng.coding_matrix(jax.random.PRNGKey(3), K, K))
+    key = jax.random.PRNGKey(4)
+    a = eng.recode(batch, key, n_out=6)
+    b = rlnc.recode(batch, key, n_out=6, s=s)
+    np.testing.assert_array_equal(np.asarray(a.A), np.asarray(b.A))
+    np.testing.assert_array_equal(np.asarray(a.C), np.asarray(b.C))
+
+
+# ---------------------------------------------------------------------------
+# multi_edge_round: bit-exact vs the per-edge reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E", [1, 2, 4])
+@pytest.mark.parametrize("wan", ["ideal", "erasure", "multihop"])
+def test_multi_edge_round_bit_exact_vs_per_edge_reference(E, wan):
+    """Same PRNG streams in, same bytes out — across edge counts, with
+    n_e > K_e spares, under WAN erasures and multi-hop recoding."""
+    s, K, L = 8, 8, 517                       # odd L: chunk pad path
+    cfg = FedNCConfig(s=s, kernel_impl="jnp_packed", chunk_l=128)
+    f = get_field(s)
+    P = f.random_elements(jax.random.PRNGKey(E), (K, L))
+    edges = hierarchy.partition_edges(K, E)
+    eng = _engine()
+
+    agree, decoded = 0, 0
+    for seed in range(6):
+        key = jax.random.PRNGKey(100 * E + seed)
+        if wan == "ideal":
+            ch_a = ch_b = None
+        elif wan == "erasure":
+            ch_a = ErasureChannel(p_erase=0.25, seed=seed)
+            ch_b = ErasureChannel(p_erase=0.25, seed=seed)
+        else:
+            ch_a = MultiHopChannel(eta=2, seed=seed)
+            ch_b = MultiHopChannel(eta=2, seed=seed)
+        a = eng.multi_edge_round(P, key, [e.client_ids for e in edges],
+                                 spare_per_edge=2, wan_channel=ch_a)
+        b = hierarchy.per_edge_round_reference(
+            P, edges, cfg, key, spare_per_edge=2, wan_channel=ch_b)
+        assert a.ok == b.ok
+        if a.report is not None or b.report is not None:
+            assert a.report.delivered == b.report.delivered
+            assert a.report.decodable == b.report.decodable
+        if a.ok:
+            decoded += 1
+            np.testing.assert_array_equal(np.asarray(a.packets),
+                                          np.asarray(b.packets))
+            # and both recovered the original packets
+            np.testing.assert_array_equal(np.asarray(a.packets),
+                                          np.asarray(P))
+        agree += 1
+    assert agree == 6
+    if wan == "ideal":
+        assert decoded == 6       # spares make the ideal stack full rank
+
+
+def test_multi_edge_round_fewer_dispatches():
+    """The fused round's L-sized dispatch count is independent of E;
+    the per-edge reference grows linearly with E."""
+    s, K, L = 8, 8, 1024
+    cfg = FedNCConfig(s=s, kernel_impl="jnp_packed", chunk_l=256)
+    f = get_field(s)
+    P = f.random_elements(jax.random.PRNGKey(0), (K, L))
+    from repro.core.fednc import engine_for
+    eng = _engine(chunk_l=256)
+    ref_eng = engine_for(cfg)       # the reference path's cached engine
+    counts = {}
+    for E in (2, 4):
+        edges = hierarchy.partition_edges(K, E)
+        before = eng.dispatch_count
+        out = eng.multi_edge_round(P, jax.random.PRNGKey(1),
+                                   [e.client_ids for e in edges],
+                                   spare_per_edge=1)
+        counts[("fused", E)] = eng.dispatch_count - before
+        assert out.ok
+        before = ref_eng.dispatch_count
+        ref = hierarchy.per_edge_round_reference(
+            P, edges, cfg, jax.random.PRNGKey(1), spare_per_edge=1)
+        counts[("ref", E)] = ref_eng.dispatch_count - before
+        assert ref.ok
+    # fused: one _stream with 2 matmuls per chunk, E-independent
+    nc = -(-L // 256)
+    assert counts[("fused", 2)] == counts[("fused", 4)] == 2 * nc
+    # per-edge reference grows with E and always exceeds the fused count
+    assert counts[("ref", 2)] > counts[("fused", 2)]
+    assert counts[("ref", 4)] > counts[("ref", 2)]
+
+
+def test_hierarchical_round_fused_equals_reference_end_to_end():
+    """hierarchical_fednc_round(fused=True) == (fused=False) at the
+    aggregated-model level, WAN erasures included."""
+    key0 = jax.random.PRNGKey(0)
+    clients = [{"w": jax.random.normal(jax.random.fold_in(key0, i),
+                                       (8, 3))} for i in range(6)]
+    weights = [1 / 6] * 6
+    prev = clients[0]
+    cfg = FedNCConfig(s=8)
+    for seed in range(5):
+        res_f = hierarchy.hierarchical_fednc_round(
+            clients, weights, prev, cfg, jax.random.PRNGKey(seed),
+            num_edges=2, spare_per_edge=2,
+            wan_channel=ErasureChannel(0.2, seed=seed), fused=True)
+        res_r = hierarchy.hierarchical_fednc_round(
+            clients, weights, prev, cfg, jax.random.PRNGKey(seed),
+            num_edges=2, spare_per_edge=2,
+            wan_channel=ErasureChannel(0.2, seed=seed), fused=False)
+        assert res_f.decoded == res_r.decoded
+        np.testing.assert_array_equal(
+            np.asarray(res_f.global_params["w"]),
+            np.asarray(res_r.global_params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# federation strategy adapter
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_strategy_aggregates():
+    from repro.federation import HierarchicalFedNCStrategy
+    from repro.core import fednc
+    key0 = jax.random.PRNGKey(7)
+    clients = [{"w": jax.random.normal(jax.random.fold_in(key0, i),
+                                       (4, 2))} for i in range(4)]
+    weights = [0.25] * 4
+    prev = clients[0]
+    strat = HierarchicalFedNCStrategy(config=FedNCConfig(s=8),
+                                      num_edges=2, spare_per_edge=1)
+    res = strat.aggregate(clients, weights, prev,
+                          np.random.default_rng(0))
+    assert res.decoded
+    ref = fednc.fedavg_round(clients, weights, prev)
+    np.testing.assert_array_equal(np.asarray(res.global_params["w"]),
+                                  np.asarray(ref.global_params["w"]))
