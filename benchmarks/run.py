@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_scale              Fig. 4 (N=100→200 analogue)
   bench_collective         fused hierarchy round (BENCH_hierarchy.json)
                            + mesh FedNC wire cost (from dry-run records)
+  bench_sim                event-driven network sim: time-to-rank-K vs
+                           time-to-all-K, populations 10^3..10^6
+                           (BENCH_sim.json)
 
 See benchmarks/README.md for every suite and JSON field.
 """
@@ -31,7 +34,8 @@ def main() -> None:
 
     from . import (bench_collective, bench_coupon,
                    bench_error_probability, bench_fl_accuracy,
-                   bench_kernels, bench_robustness, bench_scale)
+                   bench_kernels, bench_robustness, bench_scale,
+                   bench_sim)
 
     suites = [
         ("error_probability",
@@ -46,6 +50,7 @@ def main() -> None:
             rounds=3 if args.fast else 10)),
         ("scale", lambda: bench_scale.run(rounds=3 if args.fast else 5)),
         ("collective", bench_collective.run),
+        ("sim", lambda: bench_sim.run(rounds=40 if args.fast else 100)),
     ]
     print("name,us_per_call,derived")
     failures = 0

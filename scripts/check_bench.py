@@ -1,0 +1,174 @@
+#!/usr/bin/env python
+"""Benchmark-artifact drift checker (fast tier; see tests/test_bench.py).
+
+Doc drift already fails fast (scripts/check_docs.py); this gives the
+machine-readable ``BENCH_*.json`` artifacts the same treatment:
+
+1. **Presence** — every benchmark JSON the suites are supposed to
+   write must exist in the repo root; a renamed or dropped artifact
+   fails instead of silently vanishing from the perf trajectory.
+2. **Schema** — each file's required keys and per-entry required
+   fields are validated, and every numeric leaf must be finite (a NaN
+   in a benchmark means the bench is broken, not slow).
+3. **Bars** — the claims the artifacts exist to witness are enforced:
+   packed ≥ 2x unpacked kernel throughput, fused ≥ 1x per-edge
+   hierarchy wall time, the simulator's measured draw ratio within
+   10% of the Prop. 1 prediction, and the 10^6-client / 100-round
+   simulation under 60 s of CPU wall clock.
+
+Exit code 0 = artifacts present, well-formed, bars met.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _finite_leaves(name: str, obj, errors: list[str],
+                   path: str = "") -> None:
+    """Every numeric leaf must be finite."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _finite_leaves(name, v, errors, f"{path}/{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _finite_leaves(name, v, errors, f"{path}[{i}]")
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        if not math.isfinite(obj):
+            errors.append(f"{name}: non-finite value at {path}: {obj}")
+
+
+def _require(name: str, entry: dict, key: str, fields: tuple,
+             errors: list[str]) -> bool:
+    missing = [f for f in fields if f not in entry]
+    if missing:
+        errors.append(f"{name}: entry {key!r} missing fields {missing}")
+        return False
+    return True
+
+
+def check_kernels(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    enc = {k: v for k, v in data.items() if k.startswith("gf_encode_")}
+    spd = {k: v for k, v in data.items()
+           if k.startswith("packed_vs_unpacked_speedup_")}
+    if not enc:
+        errors.append(f"{name}: no gf_encode_* entries")
+    if not spd:
+        errors.append(f"{name}: no packed_vs_unpacked_speedup_* entries")
+    for k, v in enc.items():
+        _require(name, v, k, ("us_per_call", "symbols_per_s",
+                              "bytes_per_s", "s", "K", "L"), errors)
+    for k, v in spd.items():
+        if _require(name, v, k, ("x",), errors) and v["x"] < 2.0:
+            errors.append(f"{name}: {k} = {v['x']:.2f} < the 2x bar")
+    return errors
+
+
+def check_hierarchy(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    if "shape" not in data:
+        errors.append(f"{name}: missing 'shape'")
+    entries = {k: v for k, v in data.items()
+               if k.startswith("hierarchy_E")}
+    if not entries:
+        errors.append(f"{name}: no hierarchy_E* entries")
+    for k, v in entries.items():
+        if _require(name, v, k, ("dispatches_fused", "us_fused",
+                                 "dispatches_per_edge", "us_per_edge",
+                                 "dispatch_ratio", "speedup"), errors):
+            if v["speedup"] < 1.0:
+                errors.append(f"{name}: {k} fused path slower than "
+                              f"per-edge ({v['speedup']:.2f}x)")
+    return errors
+
+
+SIM_SCENARIO_FIELDS = (
+    "population", "straggler", "rounds", "time_to_rank_k_mean",
+    "time_to_all_k_mean", "time_speedup", "fednc_draws_mean",
+    "fedavg_draws_mean", "draw_ratio", "predicted_draw_ratio",
+    "draw_ratio_rel_err", "wall_s",
+)
+SIM_POPULATIONS = (10**3, 10**4, 10**5, 10**6)
+
+
+def check_sim(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    cfg = data.get("config")
+    if cfg is None:
+        return [f"{name}: missing 'config'"]
+    stragglers = cfg.get("stragglers", [])
+    if len(stragglers) < 2:
+        errors.append(f"{name}: needs >= 2 straggler distributions, "
+                      f"got {stragglers}")
+    for dist in stragglers:
+        for pop in SIM_POPULATIONS:
+            key = f"sim_pop{pop}_{dist}"
+            entry = data.get(key)
+            if entry is None:
+                errors.append(f"{name}: missing scenario {key!r}")
+                continue
+            if not _require(name, entry, key, SIM_SCENARIO_FIELDS,
+                            errors):
+                continue
+            if entry["draw_ratio_rel_err"] > 0.10:
+                errors.append(
+                    f"{name}: {key} draw ratio {entry['draw_ratio']:.3f}"
+                    f" is {entry['draw_ratio_rel_err']:.1%} from the "
+                    f"Prop. 1 prediction "
+                    f"{entry['predicted_draw_ratio']:.3f} (> 10%)")
+    scale = data.get("scale_1e6")
+    if scale is None:
+        errors.append(f"{name}: missing 'scale_1e6'")
+    elif _require(name, scale, "scale_1e6",
+                  ("population", "rounds", "wall_s", "under_60s"),
+                  errors):
+        if scale["population"] < 10**6 or scale["rounds"] < 100:
+            errors.append(f"{name}: scale_1e6 ran {scale['population']}"
+                          f" clients x {scale['rounds']} rounds; the "
+                          "bar is 10^6 x 100")
+        if not scale["under_60s"] or scale["wall_s"] >= 60.0:
+            errors.append(f"{name}: 10^6-client sim took "
+                          f"{scale['wall_s']:.1f}s (bar: < 60s)")
+    if "dropout_p10" not in data:
+        errors.append(f"{name}: missing 'dropout_p10' accounting")
+    return errors
+
+
+CHECKS = {
+    "BENCH_kernels.json": check_kernels,
+    "BENCH_hierarchy.json": check_hierarchy,
+    "BENCH_sim.json": check_sim,
+}
+
+
+def main() -> int:
+    errors: list[str] = []
+    for fname, check in CHECKS.items():
+        path = ROOT / fname
+        if not path.exists():
+            errors.append(f"{fname} missing (run the matching "
+                          "benchmarks/ suite to regenerate it)")
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            errors.append(f"{fname}: invalid JSON: {e}")
+            continue
+        _finite_leaves(fname, data, errors)
+        errors += check(fname, data)
+    for e in errors:
+        print(f"check_bench: FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench: OK ({', '.join(CHECKS)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,8 @@ Channels whose effect is *linear in the row space* additionally expose
 ``plan_transform(n, s)``: the channel's whole action on n transmitted
 tuples, decided up front (consuming exactly the same host RNG draws as
 ``transmit_encoded``) and returned as a :class:`RowGather` (erasures —
-which rows survive) or :class:`RowMix` (recoding relays — the composed
+which rows survive; blind-box sampling — which rows are drawn, with
+replacement) or :class:`RowMix` (recoding relays — the composed
 mixing matrix).  The plan only touches the tiny row space, never the
 L-sized payload, which lets `repro.engine.CodingEngine` fold the
 channel into its chunk-streamed encode→decode dispatch instead of
@@ -32,6 +33,7 @@ materializing the full coded payload between stages.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
@@ -49,6 +51,47 @@ class ChannelReport:
     delivered: int
     decodable: bool
     distinct_sources: int = -1      # FedAvg bookkeeping under blind box
+
+
+@dataclass
+class AsyncChannelReport(ChannelReport):
+    """ChannelReport plus the simulated clock: when (and after how
+    many arrivals) an async server had what it needed."""
+    consumed: int = -1              # arrivals until rank K (Prop. 1)
+    sim_time: float = float("nan")  # simulated clock at decode
+
+
+@dataclass(frozen=True)
+class ArrivalSchedule:
+    """Per-packet arrival times for n transmitted tuples.
+
+    The schedule is the bridge between the network simulator (which
+    produces times) and async consumers (which want packets in arrival
+    order): `order` is the permutation that sorts transmission order
+    into arrival order, and `time_of(g)` is the simulated clock after
+    the g-th arrival.  Times may be any order — relays and per-client
+    latency reorder packets; that is the point of scheduling arrivals
+    instead of assuming transmission order.
+    """
+
+    times: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(np.asarray(self.times).shape[0])
+
+    @functools.cached_property
+    def order(self) -> np.ndarray:
+        """Transmission-order indices sorted by arrival time (stable).
+        Cached — consumers read it plus `time_of` per round, and the
+        permutation answers both."""
+        return np.argsort(np.asarray(self.times), kind="stable")
+
+    def time_of(self, g: int) -> float:
+        """Simulated clock once g arrivals have been heard (1-based)."""
+        if not 1 <= g <= self.n:
+            raise ValueError(f"arrival count {g} outside 1..{self.n}")
+        return float(np.asarray(self.times)[self.order[g - 1]])
 
 
 @dataclass(frozen=True)
@@ -107,6 +150,27 @@ class BlindBoxChannel:
     def __init__(self, budget: int, seed: int = 0):
         self.budget = int(budget)
         self.rng = np.random.default_rng(seed)
+
+    def plan_transform(self, n: int, s: int) -> RowGather:
+        """The blind box as a row-space plan: the server's `budget`
+        receptions are uniform draws *with replacement* from the n
+        multicast tuples — a RowGather whose index vector may repeat
+        rows (repeats are linearly dependent, so the engine's fused
+        selector skips them exactly like the host-side oracle).
+        Consumes one draw of the same RNG stream as `receive_plain` /
+        `transmit_encoded`."""
+        return RowGather(self.rng.integers(0, n, size=self.budget))
+
+    def transmit_encoded(self, batch: EncodedBatch, s: int
+                         ) -> tuple[EncodedBatch, ChannelReport]:
+        """Stage-wise blind-box delivery of already-encoded tuples
+        (the oracle for the fused `plan_transform` path)."""
+        idx = self.plan_transform(batch.n, s).idx
+        out = batch[jnp.asarray(idx, jnp.int32)]
+        dec = (self.budget >= batch.K and
+               int(gf_rank(get_field(s), out.A)) == batch.K)
+        return out, ChannelReport(batch.n, self.budget, dec,
+                                  distinct_sources=len(set(idx.tolist())))
 
     def receive_plain(self, packets: jnp.ndarray
                       ) -> tuple[jnp.ndarray, np.ndarray, ChannelReport]:

@@ -43,39 +43,52 @@ def expected_draws_fednc(K: int, s: int = 8) -> float:
 
 
 def simulate_fedavg_draws(K: int, trials: int, seed: int = 0) -> np.ndarray:
-    """Monte-Carlo G for the FedAvg blind-box collector."""
+    """Monte-Carlo G for the FedAvg blind-box collector, batched.
+
+    Uses the geometric-stage decomposition: with i coupons held, the
+    next new one takes Geom((K-i)/K) draws, and the stages are
+    independent — so G = Σ_i Geom((K-i)/K) has *exactly* the law of
+    the draw-by-draw collector.  One (trials, K) geometric sample
+    replaces the per-trial Python loop of the seed.
+    """
     rng = np.random.default_rng(seed)
-    out = np.empty(trials, dtype=np.int64)
-    for t in range(trials):
-        seen: set[int] = set()
-        g = 0
-        while len(seen) < K:
-            seen.add(int(rng.integers(0, K)))
-            g += 1
-        out[t] = g
-    return out
+    p = (K - np.arange(K, dtype=np.float64)) / K
+    draws = rng.geometric(np.broadcast_to(p, (trials, K)))
+    return draws.sum(axis=1).astype(np.int64)
 
 
 def simulate_fednc_draws(K: int, s: int, trials: int, seed: int = 0
                          ) -> np.ndarray:
-    """Monte-Carlo #draws for FedNC: draw uniform coding vectors over
-    GF(2^s)^K until the stack reaches rank K (GF rank via repro.core.gf)."""
+    """Monte-Carlo #draws for FedNC: uniform coding vectors over
+    GF(2^s)^K until the stack reaches rank K.
+
+    Batched: all trials draw their candidate stacks up front and a
+    vmapped `engine.select.incremental_select` (real GF elimination,
+    not the closed-form stage law — this is the measurement the
+    formula is checked against) finds, per trial, the scan position of
+    the K-th independent row; +1 is the draw count.  Trials whose
+    stack ran out of rows before rank K (probability ~q^-margin)
+    retry with a doubled stack.
+    """
     import jax
     import jax.numpy as jnp
 
-    from .gf import get_field, rank as gf_rank
+    from repro.engine.select import incremental_select
 
-    field = get_field(s)
     rng = np.random.default_rng(seed)
-    out = np.empty(trials, dtype=np.int64)
-    for t in range(trials):
-        rows: list[np.ndarray] = []
-        r = 0
-        g = 0
-        while r < K:
-            key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
-            rows.append(np.asarray(field.random_elements(key, (K,))))
-            g += 1
-            r = int(gf_rank(field, jnp.asarray(np.stack(rows))))
-        out[t] = g
+    q = 1 << s
+    out = np.zeros(trials, dtype=np.int64)
+    todo = np.arange(trials)
+    n_max = 2 * K + 8
+    select = jax.vmap(lambda A: incremental_select(A, s))
+    while todo.size:
+        stacks = rng.integers(0, q, size=(todo.size, n_max, K),
+                              dtype=np.uint8)
+        ok, sel, _ = select(jnp.asarray(stacks))
+        ok = np.asarray(ok)
+        # sel is in scan order: position K-1 holds the index of the
+        # K-th independent row — the draw on which rank hit K
+        out[todo] = np.asarray(sel)[:, K - 1] + 1
+        todo = todo[~ok]
+        n_max *= 2
     return out

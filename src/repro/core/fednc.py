@@ -122,6 +122,24 @@ def _aggregate(P_hat: jnp.ndarray, spec: pkt.PacketSpec,
     )
 
 
+def packetize_clients(client_params: Sequence[Any], cfg: FedNCConfig
+                      ) -> tuple[jnp.ndarray, pkt.PacketSpec,
+                                 Optional[list]]:
+    """Public head of Alg. 1 for callers that run their own coded
+    pipeline (e.g. the async strategy): honors `quantize_bits` and
+    returns the qspecs the decode side needs."""
+    return _packetize(client_params, cfg)
+
+
+def aggregate_decoded(P_hat: jnp.ndarray, spec: pkt.PacketSpec,
+                      weights: Sequence[float], cfg: FedNCConfig,
+                      qspecs: Optional[list] = None) -> Any:
+    """Public tail of Alg. 1 for callers that decode their own packets
+    (e.g. the streaming rank-K decoder): decoded (K, L) symbols ->
+    weighted FedAvg aggregate, identical math to `fednc_round`."""
+    return _aggregate(P_hat, spec, weights, cfg, qspecs=qspecs)
+
+
 def encode_clients(client_params: Sequence[Any], cfg: FedNCConfig, key
                    ) -> tuple[EncodedBatch, pkt.PacketSpec, Optional[list]]:
     """Packetize + RLNC-encode K client parameter pytrees.

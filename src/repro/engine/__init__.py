@@ -9,17 +9,22 @@ registry.py — named kernel registry (single dispatch point replacing
               the impl="auto"|"jnp"|"pallas" strings of the seed).
 select.py   — incremental-GE independent-row selector (on-device
               replacement for the host-side numpy greedy loop).
+stream.py   — StreamDecoder: the selector's reduced-basis state turned
+              into an arrival-order consumer that decodes the instant
+              rank K is reached (Prop. 1, measured).
 
-See docs/engine.md for the architecture guide.
+See docs/engine.md and docs/simulator.md for the architecture guides.
 """
 from .engine import (CodingEngine, DEFAULT_CHUNK_L, EngineConfig,
                      EngineRound, get_engine)
 from .registry import (available_kernels, gf_matmul, register_kernel,
                        resolve_kernel, resolve_kernel_name)
 from .select import incremental_select
+from .stream import StreamDecoder, stream_decode
 
 __all__ = [
     "CodingEngine", "DEFAULT_CHUNK_L", "EngineConfig", "EngineRound",
     "get_engine", "available_kernels", "gf_matmul", "register_kernel",
     "resolve_kernel", "resolve_kernel_name", "incremental_select",
+    "StreamDecoder", "stream_decode",
 ]

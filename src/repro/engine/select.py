@@ -28,6 +28,41 @@ import jax.numpy as jnp
 from repro.core.gf import get_field
 
 
+def reduce_insert(field, B, Y, filled, a, c):
+    """One candidate row (a, c) against the RREF basis [B | Y].
+
+    The shared elimination step of `incremental_select` (Y zero-width)
+    and `engine.stream.StreamDecoder` (Y = the payload block): reduce
+    `a` in a single GF mat-vec (B is RREF, so subtracting a[p]·B[p]
+    for every filled pivot p zeroes all filled pivot columns at once),
+    and — when the residual is nonzero, i.e. the row is independent —
+    normalize by the residual's first nonzero symbol and insert at
+    that pivot, clearing its column from the existing rows to stay
+    RREF.  Identical row operations hit Y, preserving the invariant
+    B[p]·P = Y[p].  Returns ``(B, Y, filled, was_independent)``.
+    """
+    coeffs = jnp.where(filled, a, jnp.uint8(0))
+    red_a = a ^ field.matmul(coeffs[None, :], B)[0]
+    red_c = c ^ field.matmul(coeffs[None, :], Y)[0]
+    nz = red_a != 0
+    found = jnp.any(nz)
+    piv = jnp.argmax(nz)                    # first nonzero column
+
+    def insert(args):
+        B, Y, filled = args
+        inv = field.inv(red_a[piv])
+        new_a = field.mul(red_a, inv)
+        new_c = field.mul(red_c, inv)
+        fac = B[:, piv]
+        B = (B ^ field.mul(fac[:, None], new_a[None, :])).at[piv].set(new_a)
+        Y = (Y ^ field.mul(fac[:, None], new_c[None, :])).at[piv].set(new_c)
+        return B, Y, filled.at[piv].set(True)
+
+    B, Y, filled = jax.lax.cond(found, insert, lambda args: args,
+                                (B, Y, filled))
+    return B, Y, filled, found
+
+
 @functools.lru_cache(maxsize=None)
 def _select_fn(s: int):
     field = get_field(s)
@@ -36,40 +71,23 @@ def _select_fn(s: int):
     def run(A: jnp.ndarray):
         A = jnp.asarray(A, jnp.uint8)
         n, K = A.shape
+        c0 = jnp.zeros((0,), jnp.uint8)     # selection carries no payload
 
         def body(i, state):
-            B, filled, sel, count = state
-            row = A[i]
-            # one-shot reduction: B is in RREF, so subtracting
-            # row[c]·B[c] for every filled pivot c zeroes row at all
-            # filled pivot columns in a single pass.
-            coeffs = jnp.where(filled, row, jnp.uint8(0))
-            red = row ^ field.matmul(coeffs[None, :], B)[0]
-            nz = red != 0
-            found = jnp.any(nz)
-            piv = jnp.argmax(nz)                # first nonzero column
-
-            def pick(args):
-                B, filled, sel, count = args
-                newrow = field.mul(red, field.inv(red[piv]))
-                # keep RREF: clear column `piv` from existing rows
-                fac = B[:, piv]
-                B = B ^ field.mul(fac[:, None], newrow[None, :])
-                B = B.at[piv].set(newrow)
-                filled = filled.at[piv].set(True)
-                sel = sel.at[count].set(i)
-                return B, filled, sel, count + 1
-
-            return jax.lax.cond(found, pick, lambda a: a,
-                                (B, filled, sel, count))
+            B, Y, filled, sel, count = state
+            B, Y, filled, found = reduce_insert(field, B, Y, filled,
+                                                A[i], c0)
+            sel = jnp.where(found, sel.at[count].set(i), sel)
+            return B, Y, filled, sel, count + found.astype(jnp.int32)
 
         state = (
             jnp.zeros((K, K), jnp.uint8),       # basis B
+            jnp.zeros((K, 0), jnp.uint8),       # zero-width payload
             jnp.zeros((K,), jnp.bool_),         # filled pivots
             jnp.zeros((K,), jnp.int32),         # selected row indices
             jnp.int32(0),                       # selected count
         )
-        _, _, sel, count = jax.lax.fori_loop(0, n, body, state)
+        _, _, _, sel, count = jax.lax.fori_loop(0, n, body, state)
         return count == K, sel, count
 
     return run

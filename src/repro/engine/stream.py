@@ -1,0 +1,203 @@
+"""StreamDecoder: incremental Gaussian elimination over an arrival stream.
+
+The batch decoder (:meth:`CodingEngine.decode`) needs the whole coded
+stack in hand before it can start; under a real network the server
+hears tuples *one at a time*, and Prop. 1 says it is done the moment
+any K linearly-independent ones have arrived — typically the first
+~K arrivals.  This module turns that proposition into an executable
+state machine:
+
+* The decoder maintains the same reduced-basis state as
+  ``engine/select.py:incremental_select`` — ``B`` (K, K) in reduced
+  row-echelon form with one row per filled pivot column — extended
+  with a payload block ``Y`` (K, L) that receives *identical* row
+  operations.  Invariant: for every filled pivot p, ``B[p]·P = Y[p]``.
+* ``push(a, c)`` reduces one arrival against the basis in a single GF
+  mat-vec (B is RREF, so one pass clears every filled pivot).  A
+  nonzero residual is normalized and inserted; a zero residual is a
+  *redundant* arrival (linearly dependent — the stream analogue of a
+  duplicate blind-box draw) and is dropped.
+* When ``rank == K``, B has become the identity, so ``Y`` *is* the
+  decoded packet matrix — no final solve.  GF arithmetic is exact,
+  hence the result is bit-identical to the batch decode of any
+  full-rank subset (property-tested in tests/test_sim.py).
+* ``ingest`` consumes a whole block of arrivals as ONE jitted
+  ``lax.scan`` dispatch and returns the rank trajectory — the bulk
+  path `repro.sim` uses so a round's rank evolution costs one
+  dispatch, not one per packet.
+
+States: ``FILLING`` (rank < K) -> ``COMPLETE`` (rank == K; further
+pushes are no-ops).  ``decoded_at`` records the 1-based arrival count
+at which rank K was reached — the measured Prop.-1 draw count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gf import get_field
+from repro.core.rlnc import EncodedBatch
+from .select import reduce_insert
+
+
+@functools.lru_cache(maxsize=None)
+def _push_fn(s: int):
+    field = get_field(s)
+
+    @jax.jit
+    def push(B, Y, filled, a, c):
+        B, Y, filled, found = reduce_insert(field, B, Y, filled, a, c)
+        return B, Y, filled, found
+
+    return push
+
+
+@functools.lru_cache(maxsize=None)
+def _ingest_fn(s: int):
+    field = get_field(s)
+
+    @jax.jit
+    def ingest(B, Y, filled, A_rows, C_rows):
+        def body(carry, ac):
+            B, Y, filled = carry
+            a, c = ac
+            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
+            return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
+
+        (B, Y, filled), ranks = jax.lax.scan(
+            body, (B, Y, filled), (A_rows, C_rows))
+        return B, Y, filled, ranks
+
+    return ingest
+
+
+class StreamDecoder:
+    """Consume coded tuples in arrival order; decode at rank K.
+
+    ``L`` is the payload width in symbols (0 = track rank only, e.g.
+    for the network simulator's draw counting).
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.gf import get_field
+    >>> f = get_field(8)
+    >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+    >>> A = f.random_elements(jax.random.PRNGKey(0), (5, 3))
+    >>> C = f.matmul(A, P)
+    >>> dec = StreamDecoder(K=3, L=4, s=8)
+    >>> for g in range(5):                 # arrivals, one at a time
+    ...     _ = dec.push(A[g], C[g])
+    ...     if dec.complete:
+    ...         break
+    >>> ok, P_hat = dec.decode()
+    >>> bool(ok) and (P_hat == P).all().item(), dec.decoded_at
+    (True, 3)
+    """
+
+    def __init__(self, K: int, L: int = 0, s: int = 8):
+        self.K, self.L, self.s = int(K), int(L), int(s)
+        self.field = get_field(s)
+        self._B = jnp.zeros((self.K, self.K), jnp.uint8)
+        self._Y = jnp.zeros((self.K, self.L), jnp.uint8)
+        self._filled = jnp.zeros((self.K,), jnp.bool_)
+        self.arrivals = 0          # tuples consumed
+        self.decoded_at: Optional[int] = None   # arrival count at rank K
+
+    # -- state ------------------------------------------------------------
+
+    @property
+    def rank(self) -> int:
+        return int(jnp.sum(self._filled))
+
+    @property
+    def complete(self) -> bool:
+        return self.decoded_at is not None
+
+    @property
+    def state(self) -> str:
+        return "COMPLETE" if self.complete else "FILLING"
+
+    # -- consumption ------------------------------------------------------
+
+    def _payload(self, c) -> jnp.ndarray:
+        if c is None:
+            return jnp.zeros((self.L,), jnp.uint8)
+        return jnp.asarray(c, jnp.uint8)
+
+    def push(self, a, c=None) -> int:
+        """Consume one arrival (coding vector `a`, payload `c`).
+
+        Returns the rank after the arrival.  Pushes after COMPLETE are
+        counted but ignored (the server has already decoded)."""
+        self.arrivals += 1
+        if self.complete:
+            return self.K
+        self._B, self._Y, self._filled, _ = _push_fn(self.s)(
+            self._B, self._Y, self._filled,
+            jnp.asarray(a, jnp.uint8), self._payload(c))
+        r = self.rank
+        if r == self.K:
+            self.decoded_at = self.arrivals
+        return r
+
+    def ingest(self, A_rows, C_rows=None) -> np.ndarray:
+        """Consume a block of arrivals as one scan dispatch.
+
+        Returns the (g,) rank-after-each-arrival trajectory; updates
+        ``decoded_at`` with the first arrival index reaching K."""
+        A_rows = jnp.asarray(A_rows, jnp.uint8)
+        g = A_rows.shape[0]
+        if C_rows is None:
+            C_rows = jnp.zeros((g, self.L), jnp.uint8)
+        prior = self.arrivals
+        already = self.complete
+        self._B, self._Y, self._filled, ranks = _ingest_fn(self.s)(
+            self._B, self._Y, self._filled, A_rows,
+            jnp.asarray(C_rows, jnp.uint8))
+        self.arrivals += g
+        ranks = np.asarray(ranks)
+        if not already and ranks.size and ranks[-1] == self.K:
+            self.decoded_at = prior + int(np.argmax(ranks == self.K)) + 1
+        return ranks
+
+    # -- the result -------------------------------------------------------
+
+    def decode(self) -> tuple[bool, Optional[jnp.ndarray]]:
+        """(ok, P_hat).  At rank K the basis is the identity, so the
+        payload block is already the decoded packet matrix."""
+        if not self.complete:
+            return False, None
+        return True, self._Y
+
+    def basis(self) -> jnp.ndarray:
+        """The current reduced basis (diagnostics / tests)."""
+        return self._B
+
+
+def stream_decode(batch: EncodedBatch, s: int, order=None
+                  ) -> tuple[bool, Optional[jnp.ndarray], int]:
+    """Decode an EncodedBatch by feeding its rows in arrival order.
+
+    `order` permutes the rows (default: transmission order).  Returns
+    ``(ok, P_hat, consumed)`` where `consumed` is the number of
+    arrivals the server actually needed — the rank-K prefix length
+    (`decoded_at`; n when rank K was never reached).
+
+    The whole batch goes through one `ingest` scan dispatch: arrivals
+    past the rank-K prefix reduce to zero against the completed basis
+    and are no-ops, so the decode is identical to stopping at the
+    prefix while avoiding a dispatch + host sync per arrival.
+    """
+    K = batch.K
+    dec = StreamDecoder(K=K, L=batch.C.shape[1], s=s)
+    if order is None:
+        dec.ingest(batch.A, batch.C)
+    else:
+        idx = jnp.asarray(np.asarray(order), jnp.int32)
+        dec.ingest(batch.A[idx], batch.C[idx])
+    ok, P_hat = dec.decode()
+    return bool(ok), P_hat, (dec.decoded_at if dec.complete
+                             else dec.arrivals)

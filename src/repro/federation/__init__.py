@@ -1,10 +1,15 @@
-"""FL substrate: local training, server strategies, round orchestration."""
+"""FL substrate: local training, server strategies, round orchestration
+(lockstep and async/simulated-clock variants)."""
+from .async_rounds import (AsyncRoundLog, blind_box_schedule,
+                           run_async_experiment)
 from .client import LocalTrainer
 from .rounds import FLExperiment, RoundLog, run_experiment
-from .server import (FedAvgStrategy, FedNCStrategy,
+from .server import (AsyncFedNCStrategy, FedAvgStrategy, FedNCStrategy,
                      HierarchicalFedNCStrategy)
 
 __all__ = [
     "LocalTrainer", "FLExperiment", "RoundLog", "run_experiment",
-    "FedAvgStrategy", "FedNCStrategy", "HierarchicalFedNCStrategy",
+    "AsyncRoundLog", "blind_box_schedule", "run_async_experiment",
+    "AsyncFedNCStrategy", "FedAvgStrategy", "FedNCStrategy",
+    "HierarchicalFedNCStrategy",
 ]

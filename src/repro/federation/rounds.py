@@ -43,31 +43,42 @@ class FLExperiment:
     seed: int = 0
 
 
+def train_cohort(exp: FLExperiment, rng: np.random.Generator,
+                 global_params: Any
+                 ) -> tuple[list, np.ndarray, float]:
+    """Sample this round's participants and run local training.
+
+    Shared by the lockstep and async round drivers (identical RNG
+    consumption, so their client sampling stays comparable).  Returns
+    (client_params, normalized size weights, mean local loss)."""
+    N = len(exp.partitions)
+    part = rng.choice(N, size=exp.clients_per_round, replace=False)
+    client_params, losses, sizes = [], [], []
+    for k in part:
+        idx = exp.partitions[k]
+        ds_k = exp.dataset.subset(idx)
+        it = batches(ds_k, min(exp.batch_size, max(len(ds_k), 1)),
+                     seed=int(rng.integers(0, 2**31 - 1)),
+                     epochs=exp.trainer.local_epochs)
+        p_k, loss_k = exp.trainer.train(global_params, it)
+        client_params.append(p_k)
+        losses.append(loss_k)
+        sizes.append(len(ds_k))
+    weights = np.asarray(sizes, np.float32)
+    return client_params, weights / weights.sum(), float(np.mean(losses))
+
+
 def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
                    *, eval_every: int = 1, verbose: bool = False
                    ) -> list[RoundLog]:
     rng = np.random.default_rng(exp.seed)
     global_params = init_params
-    N = len(exp.partitions)
     logs: list[RoundLog] = []
 
     for t in range(rounds):
         t0 = time.perf_counter()
-        part = rng.choice(N, size=exp.clients_per_round, replace=False)
-        client_params, losses, sizes = [], [], []
-        for k in part:
-            idx = exp.partitions[k]
-            ds_k = exp.dataset.subset(idx)
-            it = batches(ds_k, min(exp.batch_size, max(len(ds_k), 1)),
-                         seed=int(rng.integers(0, 2**31 - 1)),
-                         epochs=exp.trainer.local_epochs)
-            p_k, loss_k = exp.trainer.train(global_params, it)
-            client_params.append(p_k)
-            losses.append(loss_k)
-            sizes.append(len(ds_k))
-
-        weights = np.asarray(sizes, np.float32)
-        weights = weights / weights.sum()
+        client_params, weights, loss = train_cohort(exp, rng,
+                                                    global_params)
         result = exp.strategy.aggregate(client_params, weights,
                                         global_params, rng)
         global_params = result.global_params
@@ -77,11 +88,10 @@ def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
             acc = exp.eval_fn(global_params, exp.test_set.images,
                               exp.test_set.labels)
         logs.append(RoundLog(t, bool(result.decoded), result.n_aggregated,
-                             float(np.mean(losses)), acc,
-                             time.perf_counter() - t0))
+                             loss, acc, time.perf_counter() - t0))
         if verbose:
             print(f"round {t:3d} decoded={result.decoded} "
-                  f"loss={np.mean(losses):.4f} acc={acc:.4f}")
+                  f"loss={loss:.4f} acc={acc:.4f}")
     return logs
 
 

@@ -1,0 +1,40 @@
+"""repro.sim — vectorized event-driven FL network simulator.
+
+The round loop in `federation/rounds.py` is lockstep: every client
+uploads, the server aggregates, the clock does not exist.  FedNC's
+efficiency and robustness claims are *temporal* — Prop. 1 is about how
+many arrivals the server must wait for — so this package simulates the
+missing axis: per-client compute/bandwidth heterogeneity, straggler
+tails, dropout and churn, partial participation, and the arrival-order
+stream the server actually hears.
+
+distributions.py — named delay distributions (constant, exponential,
+                   lognormal, pareto) normalized to a common mean so
+                   straggler tails are comparable; a registry for
+                   custom ones.
+population.py    — ClientPopulation: static per-client speed factors
+                   over millions of clients, churn-aware cohort
+                   sampling, dropout injection.
+events.py        — the vectorized event engine: one round's arrival
+                   stream (times, sources) as a handful of numpy
+                   kernels, never a Python-per-event loop.
+simulator.py     — NetworkSimulator: runs FedNC (stop at rank K via
+                   `engine.stream.StreamDecoder`) and FedAvg (wait for
+                   every cohort member) against the *same* arrival
+                   stream, producing per-round draw counts and
+                   simulated-clock decode times.
+
+See docs/simulator.md for the event model and the Prop.-1 validation.
+"""
+from .distributions import (DistSpec, STRAGGLER_PROFILES,
+                            register_distribution, sample_delays)
+from .events import RoundEvents, arrival_stream
+from .population import ClientPopulation, PopulationConfig
+from .simulator import NetworkSimulator, RoundStats, SimConfig, SimTrace
+
+__all__ = [
+    "DistSpec", "STRAGGLER_PROFILES", "register_distribution",
+    "sample_delays", "RoundEvents", "arrival_stream",
+    "ClientPopulation", "PopulationConfig",
+    "NetworkSimulator", "RoundStats", "SimConfig", "SimTrace",
+]

@@ -1,0 +1,49 @@
+"""Benchmark artifacts stay true (fast tier): scripts/check_bench.py.
+
+Same pattern as tests/test_docs.py — the checker validates presence,
+schema, finite values, and the headline bars of every BENCH_*.json in
+the repo root, so benchmark drift fails the fast tier exactly like
+doc drift already does.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_checker(cwd=ROOT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_bench.py")],
+        capture_output=True, text=True, timeout=120, cwd=cwd, env=env)
+
+
+def test_check_bench_passes():
+    proc = _run_checker()
+    assert proc.returncode == 0, (
+        f"benchmark artifacts drifted:\n{proc.stderr}\n{proc.stdout}")
+
+
+def test_check_bench_catches_broken_sim_artifact(tmp_path):
+    """A violated bar (draw ratio off by >10%) must fail the checker:
+    copy the tree's checker next to a doctored BENCH_sim.json."""
+    sim = json.loads((ROOT / "BENCH_sim.json").read_text())
+    key = next(k for k in sim if k.startswith("sim_pop"))
+    sim[key]["draw_ratio_rel_err"] = 0.5
+    root = tmp_path / "repo"
+    (root / "scripts").mkdir(parents=True)
+    (root / "scripts" / "check_bench.py").write_text(
+        (ROOT / "scripts" / "check_bench.py").read_text())
+    for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json"):
+        (root / fname).write_text((ROOT / fname).read_text())
+    (root / "BENCH_sim.json").write_text(json.dumps(sim))
+    env = dict(os.environ)
+    proc = subprocess.run(
+        [sys.executable, str(root / "scripts" / "check_bench.py")],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert proc.returncode == 1
+    assert "Prop. 1" in proc.stderr

@@ -37,9 +37,28 @@ def test_simulation_matches_formula():
     assert np.mean(sim) == pytest.approx(expect, rel=0.15)
 
 
-@pytest.mark.slow
 def test_fednc_simulation_matches_formula():
+    """Vectorized (vmapped incremental-GE) Monte-Carlo leaves the slow
+    tier: real GF rank measurements, batched over trials."""
     K = 6
     sim = coupon.simulate_fednc_draws(K, s=8, trials=60, seed=0)
     assert np.mean(sim) == pytest.approx(
         coupon.expected_draws_fednc(K, 8), rel=0.1)
+
+
+def test_fednc_simulation_small_field_retry_path():
+    """s=1 (q=2) makes dependent draws common, exercising both the
+    longer stacks and the doubled-stack retry fallback."""
+    sim = coupon.simulate_fednc_draws(5, s=1, trials=300, seed=1)
+    assert np.mean(sim) == pytest.approx(
+        coupon.expected_draws_fednc(5, 1), rel=0.1)
+
+
+def test_fedavg_simulation_distribution_tail():
+    """The geometric-stage decomposition reproduces the collector's
+    law, not just its mean: P(G > K·H(K)·2) is small but nonzero."""
+    K = 10
+    sim = coupon.simulate_fedavg_draws(K, trials=4000, seed=2)
+    assert sim.min() >= K
+    tail = float(np.mean(sim > 2 * coupon.expected_draws_fedavg(K)))
+    assert 0.0 < tail < 0.2

@@ -1,7 +1,8 @@
 """Docs stay true (fast tier): scripts/check_docs.py must pass.
 
 The checker executes every fenced ```python block in README.md,
-docs/engine.md, and benchmarks/README.md, verifies the documented
+docs/engine.md, docs/simulator.md, and benchmarks/README.md,
+verifies the documented
 kernel-registry names against `repro.engine.available_kernels()`, and
 diffs the README throughput table against BENCH_kernels.json.  Run in
 a subprocess so its registry mutations (the register_kernel example)

@@ -70,3 +70,28 @@ def test_round_log_fields():
     l = logs[0]
     assert l.n_aggregated == 2 and l.decoded
     assert np.isfinite(l.train_loss)
+
+
+@pytest.mark.slow
+def test_async_fednc_system_trains():
+    """The simulated-clock driver end to end: the async server
+    aggregates from the first rank-K prefix of arrivals (~K of the
+    multicast budget) and training still converges."""
+    from repro.federation import AsyncFedNCStrategy, blind_box_schedule
+    from repro.federation.async_rounds import run_async_experiment
+    from repro.sim.distributions import STRAGGLER_PROFILES
+
+    strat = AsyncFedNCStrategy(
+        config=FedNCConfig(s=8), budget=12,
+        schedule_fn=blind_box_schedule(STRAGGLER_PROFILES["pareto"]))
+    exp, _ = _make_exp(strat)
+    params = init_cnn(jax.random.PRNGKey(0), image_size=16)
+    logs = run_async_experiment(exp, params, rounds=5, eval_every=5)
+    assert all(l.decoded for l in logs)
+    # the whole point: ~K arrivals consumed, never the full budget
+    assert all(4 <= l.consumed <= 12 for l in logs)
+    assert all(np.isfinite(l.sim_time) and l.sim_time > 0 for l in logs)
+    # training converges (test_acc at 5 rounds is too noisy to gate on;
+    # per-round aggregates are bit-identical to sync FedNC by
+    # construction — the strategy decodes the same packets)
+    assert logs[-1].train_loss < 0.5 * logs[0].train_loss

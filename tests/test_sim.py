@@ -1,0 +1,330 @@
+"""repro.sim + engine.stream: the temporal axis, tested.
+
+* StreamDecoder fed packets one at a time — any arrival order, with
+  redundant/dependent rows interleaved — must be bit-exact with the
+  batch CodingEngine decode (GF arithmetic has no rounding; any
+  mismatch is a real bug).
+* The simulator must be deterministic by seed, account for dropout
+  exactly, and reproduce Prop. 1's draw counts as measurements.
+* BlindBoxChannel's new `plan_transform` must consume the same RNG
+  stream as the host-side draw (the oracle) and decode identically
+  through the fused round path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import ArrivalSchedule, BlindBoxChannel
+from repro.core.gf import get_field, rank as gf_rank
+from repro.core.rlnc import EncodedBatch
+from repro.engine import (CodingEngine, EngineConfig, StreamDecoder,
+                          incremental_select, stream_decode)
+from repro.sim import (DistSpec, NetworkSimulator, PopulationConfig,
+                       SimConfig, STRAGGLER_PROFILES, arrival_stream)
+
+
+# ---------------------------------------------------------------------------
+# StreamDecoder vs batch decode
+# ---------------------------------------------------------------------------
+
+def _coded(s, K, L, n, seed):
+    f = get_field(s)
+    kp, ka = jax.random.split(jax.random.PRNGKey(seed))
+    P = f.random_elements(kp, (K, L))
+    A = f.random_elements(ka, (n, K))
+    return f, P, A, f.matmul(A, P)
+
+
+def test_stream_decoder_matches_batch_decode_in_order():
+    s, K, L = 8, 6, 40
+    f, P, A, C = _coded(s, K, L, 10, seed=0)
+    ok, P_hat, consumed = stream_decode(EncodedBatch(A=A, C=C), s)
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp"))
+    ok_b, P_b = eng.decode(EncodedBatch(A=A, C=C))
+    assert ok == bool(ok_b)
+    np.testing.assert_array_equal(np.asarray(P_hat), np.asarray(P_b))
+    np.testing.assert_array_equal(np.asarray(P_hat), np.asarray(P))
+    assert consumed <= 10
+
+
+def test_stream_decoder_dependent_rows_interleaved():
+    """Duplicates and GF-linear combinations must be consumed as
+    redundant (rank unchanged) without corrupting the decode."""
+    s, K, L = 8, 5, 30
+    f, P, A, C = _coded(s, K, L, 5, seed=1)
+    if int(gf_rank(f, A)) < K:
+        pytest.skip("unlucky singular draw")
+    dec = StreamDecoder(K=K, L=L, s=s)
+    # interleave: row0, dup(row0), row1, combo(0,1), rows 2..4
+    combo_a = f.add(A[0], f.mul(jnp.uint8(7), A[1]))
+    combo_c = f.add(C[0], f.mul(jnp.uint8(7), C[1]))
+    feed = [(A[0], C[0]), (A[0], C[0]), (A[1], C[1]),
+            (combo_a, combo_c), (A[2], C[2]), (A[3], C[3]),
+            (A[4], C[4])]
+    ranks = [dec.push(a, c) for a, c in feed]
+    assert ranks == [1, 1, 2, 2, 3, 4, 5]
+    assert dec.decoded_at == 7 and dec.arrivals == 7
+    ok, P_hat = dec.decode()
+    assert ok
+    np.testing.assert_array_equal(np.asarray(P_hat), np.asarray(P))
+
+
+def test_stream_decoder_ingest_equals_pushes():
+    s, K, L = 4, 5, 17
+    f, P, A, C = _coded(s, K, L, 12, seed=2)
+    one = StreamDecoder(K=K, L=L, s=s)
+    ranks_push = [one.push(A[g], C[g]) for g in range(12)]
+    bulk = StreamDecoder(K=K, L=L, s=s)
+    ranks_bulk = bulk.ingest(A, C)
+    assert ranks_push == list(ranks_bulk)
+    assert one.decoded_at == bulk.decoded_at
+    np.testing.assert_array_equal(np.asarray(one.decode()[1]),
+                                  np.asarray(bulk.decode()[1]))
+
+
+def test_stream_decoder_rank_short_stream():
+    """Fewer than K independent arrivals: FILLING, decode refuses."""
+    s, K = 8, 6
+    f, P, A, C = _coded(s, K, 10, 4, seed=3)
+    dec = StreamDecoder(K=K, L=10, s=s)
+    dec.ingest(A, C)
+    assert dec.state == "FILLING" and not dec.complete
+    ok, out = dec.decode()
+    assert not ok and out is None
+
+
+def test_stream_decoder_agrees_with_incremental_select():
+    """The decoder's useful arrivals are exactly the rows the engine's
+    on-device selector picks — same reduced-basis rule."""
+    s, K = 8, 6
+    f, P, A, C = _coded(s, K, 8, 15, seed=4)
+    dec = StreamDecoder(K=K, L=8, s=s)
+    prev, useful = 0, []
+    for g in range(15):
+        r = dec.push(A[g], C[g])
+        if r > prev:
+            useful.append(g)
+        prev = r
+    ok, idx, count = incremental_select(A, s)
+    assert bool(ok)
+    assert useful == list(np.asarray(idx)[:int(count)])
+
+
+def _any_order_case(s, K, L, extra, seed):
+    """Shared body: a coded batch plus `extra` dependent rows, fed in
+    a shuffled arrival order, must match the batch engine decode —
+    bit-exact — whenever rank K is reachable."""
+    f = get_field(s)
+    rng = np.random.default_rng(seed)
+    kp, ka, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    P = f.random_elements(kp, (K, L))
+    A = f.random_elements(ka, (K + 2, K))
+    if extra:
+        # dependent rows: random GF mixtures of the real ones
+        M = f.random_elements(km, (extra, K + 2))
+        A = jnp.concatenate([A, f.matmul(M, A)], axis=0)
+    C = f.matmul(A, P)
+    order = rng.permutation(A.shape[0])
+    ok, P_hat, consumed = stream_decode(
+        EncodedBatch(A=A, C=C), s, order=order)
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp"))
+    ok_b, P_b = eng.decode(EncodedBatch(A=A, C=C))
+    assert ok == bool(ok_b)    # same rows, same rank verdict
+    if ok:
+        np.testing.assert_array_equal(np.asarray(P_hat),
+                                      np.asarray(P_b))
+        np.testing.assert_array_equal(np.asarray(P_hat), np.asarray(P))
+        assert consumed <= A.shape[0]
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.sampled_from([1, 2, 4, 8]), K=st.integers(2, 6),
+           L=st.integers(1, 24), extra=st.integers(0, 6),
+           seed=st.integers(0, 2**30))
+    def test_stream_decoder_any_order_property(s, K, L, extra, seed):
+        _any_order_case(s, K, L, extra, seed)
+else:
+    @pytest.mark.parametrize("s,K,L,extra,seed", [
+        (8, 5, 16, 3, 0), (4, 6, 9, 0, 1), (2, 3, 24, 6, 2),
+        (1, 4, 7, 4, 3), (8, 2, 1, 1, 4), (1, 6, 12, 6, 5),
+    ])
+    def test_stream_decoder_any_order_cases(s, K, L, extra, seed):
+        """Deterministic sweep standing in when hypothesis is absent
+        (pip install -r requirements-dev.txt for the full search)."""
+        _any_order_case(s, K, L, extra, seed)
+
+
+# ---------------------------------------------------------------------------
+# ArrivalSchedule + channel plumbing
+# ---------------------------------------------------------------------------
+
+def test_arrival_schedule_orders_and_clocks():
+    sched = ArrivalSchedule(np.asarray([3.0, 1.0, 2.0]))
+    assert list(sched.order) == [1, 2, 0]
+    assert sched.time_of(1) == 1.0 and sched.time_of(3) == 3.0
+    with pytest.raises(ValueError):
+        sched.time_of(4)
+
+
+def test_blind_box_plan_matches_host_oracle():
+    """plan_transform consumes the same RNG stream as the host-side
+    draw: equal seeds give identical sampling-with-replacement draws."""
+    planned = BlindBoxChannel(budget=30, seed=9).plan_transform(12, 8)
+    oracle = np.random.default_rng(9).integers(0, 12, size=30)
+    np.testing.assert_array_equal(planned.idx, oracle)
+
+
+def test_blind_box_fused_round_matches_stagewise():
+    """The fused round through plan_transform decodes bit-identically
+    to stage-wise transmit_encoded + decode on the same RNG stream."""
+    s, K, L = 8, 6, 120
+    f = get_field(s)
+    P = f.random_elements(jax.random.PRNGKey(0), (K, L))
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp", chunk_l=64))
+    key = jax.random.PRNGKey(42)
+    out = eng.round(P, key, channel=BlindBoxChannel(budget=20, seed=3))
+    # stagewise oracle, same coding matrix + channel RNG stream
+    A = eng.coding_matrix(key, K, K)
+    batch = eng.encode(P, A)
+    rx, rep = BlindBoxChannel(budget=20, seed=3).transmit_encoded(
+        batch, s)
+    ok, P_hat = eng.decode(rx)
+    assert out.ok == bool(ok)
+    if out.ok:
+        np.testing.assert_array_equal(np.asarray(out.packets),
+                                      np.asarray(P_hat))
+        np.testing.assert_array_equal(np.asarray(out.packets),
+                                      np.asarray(P))
+
+
+def test_blind_box_small_budget_fails_cleanly():
+    s, K = 8, 6
+    f = get_field(s)
+    P = f.random_elements(jax.random.PRNGKey(1), (K, 50))
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp"))
+    out = eng.round(P, jax.random.PRNGKey(2),
+                    channel=BlindBoxChannel(budget=K - 2, seed=0))
+    assert not out.ok and out.packets is None
+    assert out.report.delivered == K - 2
+
+
+# ---------------------------------------------------------------------------
+# Simulator: determinism, dropout accounting, Prop. 1 as measurement
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    pop = {"n_clients": kw.pop("n_clients", 2000)}
+    for f_ in ("p_dropout", "p_churn"):
+        if f_ in kw:
+            pop[f_] = kw.pop(f_)
+    return SimConfig(population=PopulationConfig(**pop), **kw)
+
+
+def test_simulator_deterministic_by_seed():
+    cfg = _cfg(clients_per_round=24, seed=11,
+               gap=STRAGGLER_PROFILES["pareto"], p_dropout=0.05)
+    a = NetworkSimulator(cfg).run(25)
+    b = NetworkSimulator(cfg).run(25)
+    assert a.rounds == b.rounds
+    c = NetworkSimulator(_cfg(clients_per_round=24, seed=12,
+                              gap=STRAGGLER_PROFILES["pareto"],
+                              p_dropout=0.05)).run(25)
+    assert a.rounds != c.rounds
+
+
+def test_simulator_dropout_accounting():
+    cfg = _cfg(clients_per_round=16, p_dropout=0.25, seed=4,
+               timeout=200.0)
+    trace = NetworkSimulator(cfg).run(40)
+    assert any(r.n_dropped > 0 for r in trace.rounds)
+    for r in trace.rounds:
+        assert r.k == 16 and r.k_live + r.n_dropped == r.k
+        # FedNC decodes the survivors' subspace every round
+        assert r.fednc_decoded and r.fednc_draws >= r.k_live
+        # FedAvg blocks on any missing coupon
+        assert r.fedavg_complete == (r.n_dropped == 0)
+        assert r.fedavg_heard <= r.k_live
+        if r.fedavg_complete:
+            assert r.fedavg_heard == r.k_live
+            assert r.fedavg_time <= cfg.timeout
+        else:
+            assert r.fedavg_time == cfg.timeout
+
+
+def test_simulator_measures_prop1_draw_counts():
+    """The measured draw ratio (StreamDecoder rank-K arrivals vs the
+    blind-box all-K wait) lands near K·H(K)/K from core.coupon."""
+    from repro.core import coupon
+    K = 32
+    cfg = _cfg(clients_per_round=K, seed=0)
+    s = NetworkSimulator(cfg).run(150).summary()
+    predicted = (coupon.expected_draws_fedavg(K)
+                 / coupon.expected_draws_fednc(K, 8))
+    assert s["draw_ratio"] == pytest.approx(predicted, rel=0.10)
+    # FedNC consumes ~K arrivals, FedAvg ~K·H(K)
+    assert s["fednc_draws_mean"] == pytest.approx(K, rel=0.02)
+    assert s["time_to_all_k_mean"] > s["time_to_rank_k_mean"]
+
+
+def test_simulator_stream_and_stages_decoders_agree():
+    """The geometric-stage rank law samples the same distribution the
+    StreamDecoder measures: means match across decoder modes."""
+    base = dict(clients_per_round=24, seed=6)
+    ms = NetworkSimulator(_cfg(decoder="stream", **base)
+                          ).run(120).summary()
+    mg = NetworkSimulator(_cfg(decoder="stages", **base)
+                          ).run(120).summary()
+    assert ms["fednc_draws_mean"] == pytest.approx(
+        mg["fednc_draws_mean"], rel=0.01)
+
+
+def test_simulator_churn_replaces_invitations():
+    cfg = _cfg(clients_per_round=12, p_churn=0.3, seed=8,
+               n_clients=500)
+    trace = NetworkSimulator(cfg).run(20)
+    assert all(r.k == 12 for r in trace.rounds)
+    assert sum(r.n_churned for r in trace.rounds) > 0
+
+
+def test_arrival_stream_delay_reorders_sources():
+    """Per-client delay offsets reorder arrivals (times stay sorted)."""
+    rng = np.random.default_rng(0)
+    live = np.ones(8, bool)
+    slow = np.ones(8)
+    ev = arrival_stream(rng, live, slow, DistSpec(), 200,
+                        delay=DistSpec("pareto", 5.0, 1.5))
+    assert np.all(np.diff(ev.times) >= 0)
+    assert ev.n_events == 200
+    assert set(ev.sources.tolist()) <= set(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Async strategy end-to-end
+# ---------------------------------------------------------------------------
+
+def test_async_strategy_aggregates_rank_k_prefix():
+    from repro.core.fednc import FedNCConfig
+    from repro.federation import AsyncFedNCStrategy, blind_box_schedule
+    params = [{"w": jnp.arange(16, dtype=jnp.float32) * (k + 1),
+               "b": jnp.float32(k)} for k in range(5)]
+    strat = AsyncFedNCStrategy(
+        config=FedNCConfig(s=8), budget=20,
+        schedule_fn=blind_box_schedule(STRAGGLER_PROFILES["lognormal"]))
+    w = np.full(5, 0.2, np.float32)
+    res = strat.aggregate(params, w, params[0],
+                          np.random.default_rng(3))
+    assert res.decoded and res.n_aggregated == 5
+    assert 5 <= res.report.consumed <= 20   # ~K of the 20 sent
+    assert np.isfinite(res.report.sim_time)
+    want = sum(0.2 * p["w"] for p in params)
+    np.testing.assert_allclose(np.asarray(res.global_params["w"]),
+                               np.asarray(want), rtol=1e-6)
