@@ -18,7 +18,7 @@ from repro.data import (iid_partition, make_image_dataset,
 from repro.federation import (FedAvgStrategy, FedNCStrategy, FLExperiment,
                               LocalTrainer, run_experiment)
 from repro.federation.rounds import final_accuracy
-from repro.models.cnn import merge_bn_stats, cnn_accuracy, cnn_loss, init_cnn
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn, merge_bn_stats
 from repro.optim import adam
 
 from .common import emit

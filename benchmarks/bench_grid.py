@@ -1,0 +1,156 @@
+"""The full scenario grid: every strategy family x network regime.
+
+Four sections, one ``GRID_grid.json`` (+ ``GRID_grid.md`` summary):
+
+* **scenarios** — the cartesian core: {FedNC stream, FedAvg blind-box}
+  x four straggler profiles x populations 10^3/10^4, the stages
+  decoder at 10^4, a 10%-dropout cell (FedAvg blocked, FedNC decoding
+  survivors), the Section-III hierarchy at E in {2, 4, 8} over both
+  the table-oracle and lane-packed GF kernels, and the async FL
+  strategies.  Per-scenario seeds come from ``repro.grid.spec`` and
+  never change as the grid grows.
+* **delay_sweep** — the ROADMAP's delay-reordered regime: per-client
+  latency offsets reorder arrivals, breaking the blind-box i.i.d.
+  assumption Prop. 1 prices at K·H(K).  The sweep publishes measured
+  FedAvg draw counts *above* K·H(K) as a function of reorder spread
+  (the bar: > 1.2x at the widest spread), while FedNC's rank law is
+  arrival-order-invariant.
+* **compute_coupling** — the async round with per-client local-
+  training compute folded into the arrival clock: the coupled decode
+  time must strictly dominate the network-only schedule of the same
+  seed, every round (the bar: ``dominates`` is true).
+
+``scripts/check_bench.py`` validates the artifact's schema and both
+bars; ``python -m repro.grid --smoke`` is the CI-sized sibling.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.grid import (GridAxes, grid_document, markdown_report,
+                        run_grid)
+
+from .common import emit
+
+DELAY_SPREADS = (0.0, 1.0, 2.0, 5.0, 10.0)
+DELAY_INFLATION_BAR = 1.2      # measured ~2.0x at spread 10
+K = 32
+JOBS = 2
+
+
+def _axes_list(rounds: int, fast: bool) -> list[GridAxes]:
+    """The grid, as a list of axis blocks (one expand each)."""
+    pops = (10**3,) if fast else (10**3, 10**4)
+    stragglers = (("exponential", "pareto") if fast else
+                  ("constant", "exponential", "lognormal", "pareto"))
+    blocks = [
+        # the Prop.-1 core: both collectors, every straggler tail
+        GridAxes(strategy=("fednc_stream", "fedavg"),
+                 straggler=stragglers, population=pops,
+                 clients_per_round=K, rounds=rounds),
+        # the geometric-stage decoder (huge-cohort path) cross-checks
+        # the StreamDecoder's measured rank law
+        GridAxes(strategy=("fednc_stages",),
+                 straggler=("lognormal",), population=(10**4,),
+                 clients_per_round=K, rounds=rounds),
+        # dropout: FedAvg blocks on its missing coupon, FedNC decodes
+        # the survivors (draw-ratio fields are null here by design)
+        GridAxes(strategy=("fednc_stream",), straggler=("lognormal",),
+                 p_dropout=(0.1,), population=(10**4,),
+                 clients_per_round=K, rounds=rounds),
+        # the §III hierarchy across the GF kernel axis
+        GridAxes(strategy=("hier:2", "hier:4", "hier:8"),
+                 kernel=("jnp",) if fast else ("jnp", "jnp_packed"),
+                 clients_per_round=16, rounds=2 if fast else 3),
+        # async FL end to end, network-only and compute-coupled
+        GridAxes(strategy=("async", "async_compute"),
+                 straggler=("lognormal",), clients_per_round=4,
+                 rounds=2 if fast else 4),
+    ]
+    return blocks
+
+
+def _delay_sweep(rounds: int) -> dict:
+    """FedAvg inflation beyond K·H(K) vs per-client reorder spread."""
+    from repro.core import coupon
+    axes = GridAxes(strategy=("fedavg",), straggler=("exponential",),
+                    delay_spread=DELAY_SPREADS, population=(10**4,),
+                    clients_per_round=K, rounds=rounds, base_seed=3)
+    specs = axes.expand()
+    results = list(run_grid(specs, jobs=JOBS).values())
+    kh_k = coupon.expected_draws_fedavg(K)
+    sweep = {
+        "clients_per_round": K,
+        "rounds": rounds,
+        "kh_k": kh_k,
+        "spreads": [s.delay_spread for s in specs],
+        "fedavg_draws_mean": [r["fedavg_draws_mean"] for r in results],
+        "fednc_draws_mean": [r["fednc_draws_mean"] for r in results],
+        "draw_ratio": [r["draw_ratio"] for r in results],
+        "inflation": [r["fedavg_inflation"] for r in results],
+    }
+    sweep["max_inflation"] = float(np.max(sweep["inflation"]))
+    sweep["inflation_bar"] = DELAY_INFLATION_BAR
+    sweep["exceeds_bar"] = bool(
+        sweep["inflation"][-1] > DELAY_INFLATION_BAR)
+    for d, infl in zip(sweep["spreads"], sweep["inflation"]):
+        emit(f"grid_delay_spread{d:g}", 0.0,
+             f"fedavg_inflation={infl:.3f}x_of_KHK")
+    return sweep
+
+
+def run(rounds: int = 60, fast: bool = False,
+        json_path: str = "GRID_grid.json",
+        md_path: str = "GRID_grid.md") -> dict:
+    if fast:
+        rounds = min(rounds, 20)
+
+    scenarios: dict[str, dict] = {}
+    blocks = _axes_list(rounds, fast)
+    # the recorded config is the union of every block's axis values
+    config = blocks[0].config()
+    for axes in blocks[1:]:
+        for k, vals in axes.config()["axes"].items():
+            merged = config["axes"][k] + [
+                v for v in vals if v not in config["axes"][k]]
+            config["axes"][k] = merged
+    for axes in blocks:
+        block = run_grid(axes.expand(), jobs=JOBS)
+        for name, entry in block.items():
+            scenarios[name] = entry
+            emit(f"grid_{name}", entry["wall_s"] * 1e6,
+                 f"strategy={entry['axes']['strategy']};"
+                 f"draw_ratio={entry.get('draw_ratio')};"
+                 f"decode={entry.get('decode_rate', entry.get('fednc_decode_rate'))}")
+
+    sweep = _delay_sweep(rounds)
+
+    cc_name = next(n for n, e in scenarios.items()
+                   if e["axes"]["strategy"] == "async_compute")
+    cc = scenarios[cc_name]
+    compute_coupling = {
+        "scenario": cc_name,
+        "rounds": cc["rounds"],
+        "sim_time_mean": cc["sim_time_mean"],
+        "sim_time_network_mean": cc["sim_time_network_mean"],
+        "overhead_mean": cc["compute_overhead_mean"],
+        "dominates": cc["compute_dominates"],
+    }
+    emit("grid_compute_coupling", 0.0,
+         f"coupled={cc['sim_time_mean']:.3f};"
+         f"network={cc['sim_time_network_mean']:.3f};"
+         f"dominates={cc['compute_dominates']}")
+
+    doc = grid_document(config, scenarios, full=True,
+                        delay_sweep=sweep,
+                        compute_coupling=compute_coupling)
+    pathlib.Path(json_path).write_text(json.dumps(doc, indent=2))
+    pathlib.Path(md_path).write_text(markdown_report(doc))
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -26,8 +26,8 @@ import pathlib
 import time
 
 from repro.core import coupon
-from repro.sim import (NetworkSimulator, PopulationConfig, SimConfig,
-                       STRAGGLER_PROFILES)
+from repro.sim import (STRAGGLER_PROFILES, NetworkSimulator,
+                       PopulationConfig, SimConfig)
 
 from .common import emit
 

@@ -15,6 +15,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_sim                event-driven network sim: time-to-rank-K vs
                            time-to-all-K, populations 10^3..10^6
                            (BENCH_sim.json)
+  bench_grid               the scenario grid: strategy x straggler x
+                           delay-reorder x dropout x population x GF
+                           kernel, + the delay-reordered FedAvg sweep
+                           and compute-coupled arrivals (GRID_grid.json)
 
 See benchmarks/README.md for every suite and JSON field.
 """
@@ -34,8 +38,8 @@ def main() -> None:
 
     from . import (bench_collective, bench_coupon,
                    bench_error_probability, bench_fl_accuracy,
-                   bench_kernels, bench_robustness, bench_scale,
-                   bench_sim)
+                   bench_grid, bench_kernels, bench_robustness,
+                   bench_scale, bench_sim)
 
     suites = [
         ("error_probability",
@@ -51,6 +55,7 @@ def main() -> None:
         ("scale", lambda: bench_scale.run(rounds=3 if args.fast else 5)),
         ("collective", bench_collective.run),
         ("sim", lambda: bench_sim.run(rounds=40 if args.fast else 100)),
+        ("grid", lambda: bench_grid.run(fast=args.fast)),
     ]
     print("name,us_per_call,derived")
     failures = 0

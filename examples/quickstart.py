@@ -8,15 +8,14 @@ Gaussian-eliminates back the originals — bit-exactly — then aggregates.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import fednc
 from repro.core.channel import ErasureChannel
 from repro.core.fednc import FedNCConfig
-from repro.data import make_image_dataset, iid_partition
+from repro.data import iid_partition, make_image_dataset
 from repro.data.synthetic import batches
 from repro.federation import LocalTrainer
-from repro.models.cnn import merge_bn_stats, cnn_loss, init_cnn
+from repro.models.cnn import cnn_loss, init_cnn, merge_bn_stats
 from repro.optim import adam
 
 

@@ -17,8 +17,8 @@ import argparse
 import time
 
 from repro.core import coupon
-from repro.sim import (NetworkSimulator, PopulationConfig, SimConfig,
-                       STRAGGLER_PROFILES)
+from repro.sim import (STRAGGLER_PROFILES, NetworkSimulator,
+                       PopulationConfig, SimConfig)
 
 
 def main() -> None:

@@ -16,6 +16,15 @@ machine-readable ``BENCH_*.json`` artifacts the same treatment:
    10% of the Prop. 1 prediction, and the 10^6-client / 100-round
    simulation under 60 s of CPU wall clock.
 
+The scenario-grid artifacts (``GRID_*.json``, schema
+``fednc-grid-v1`` from ``repro.grid``) get the same treatment:
+``GRID_grid.json`` (the full grid, ``benchmarks/bench_grid.py``) must
+exist and carry the delay-reordered sweep (FedAvg inflation beyond
+K·H(K) above its bar) and the compute-coupling section (coupled decode
+clock strictly dominating the network-only schedule); any other
+``GRID_*.json`` in the root (e.g. the CI smoke artifact) is
+schema-checked too — axes, per-scenario seed, draw-ratio fields.
+
 Exit code 0 = artifacts present, well-formed, bars met.
 """
 from __future__ import annotations
@@ -141,16 +150,105 @@ def check_sim(name: str, data: dict) -> list[str]:
     return errors
 
 
+GRID_SCHEMA = "fednc-grid-v1"
+GRID_AXES = ("strategy", "straggler", "delay_spread", "p_dropout",
+             "population", "kernel")
+GRID_SIM_STRATEGIES = ("fednc_stream", "fednc_stages", "fedavg")
+GRID_DRAW_FIELDS = ("fednc_draws_mean", "fedavg_draws_mean",
+                    "draw_ratio")
+
+
+def check_grid(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    if data.get("schema") != GRID_SCHEMA:
+        return [f"{name}: schema {data.get('schema')!r} != "
+                f"{GRID_SCHEMA!r}"]
+    cfg = data.get("config")
+    if not isinstance(cfg, dict):
+        return [f"{name}: missing 'config'"]
+    if not isinstance(cfg.get("base_seed"), int):
+        errors.append(f"{name}: config.base_seed missing/not int")
+    axes = cfg.get("axes", {})
+    missing_axes = [a for a in GRID_AXES if a not in axes]
+    if missing_axes:
+        errors.append(f"{name}: config.axes missing {missing_axes}")
+    scenarios = data.get("scenarios")
+    if not scenarios:
+        return errors + [f"{name}: no scenarios"]
+    for key, entry in scenarios.items():
+        if not _require(name, entry, key, ("seed", "axes", "rounds",
+                                           "wall_s"), errors):
+            continue
+        if not isinstance(entry["seed"], int):
+            errors.append(f"{name}: {key} seed is not an int")
+        ax = entry["axes"]
+        missing = [a for a in GRID_AXES if a not in ax]
+        if missing:
+            errors.append(f"{name}: {key} axes missing {missing}")
+            continue
+        if ax["strategy"] in GRID_SIM_STRATEGIES:
+            _require(name, entry, key, GRID_DRAW_FIELDS, errors)
+            # null draw stats are legal only when dropout blocked the
+            # FedAvg collector in every round
+            if (entry.get("draw_ratio") is None
+                    and not ax["p_dropout"] > 0):
+                errors.append(f"{name}: {key} has null draw_ratio "
+                              "without dropout")
+    if cfg.get("full"):
+        errors += _check_grid_full(name, data)
+    return errors
+
+
+def _check_grid_full(name: str, data: dict) -> list[str]:
+    """The bars only the full grid (bench_grid.py) must clear."""
+    errors: list[str] = []
+    sweep = data.get("delay_sweep")
+    if sweep is None:
+        errors.append(f"{name}: full grid missing 'delay_sweep'")
+    elif _require(name, sweep, "delay_sweep",
+                  ("spreads", "kh_k", "fedavg_draws_mean", "inflation",
+                   "draw_ratio", "inflation_bar"), errors):
+        n = len(sweep["spreads"])
+        if any(len(sweep[k]) != n for k in
+               ("fedavg_draws_mean", "inflation", "draw_ratio")):
+            errors.append(f"{name}: delay_sweep arrays disagree on "
+                          "length")
+        elif sweep["inflation"][-1] <= sweep["inflation_bar"]:
+            errors.append(
+                f"{name}: delay-reordered FedAvg inflation "
+                f"{sweep['inflation'][-1]:.2f}x does not exceed the "
+                f"{sweep['inflation_bar']}x bar — the reordering "
+                "regime stopped hurting the blind-box collector?")
+    cc = data.get("compute_coupling")
+    if cc is None:
+        errors.append(f"{name}: full grid missing 'compute_coupling'")
+    elif _require(name, cc, "compute_coupling",
+                  ("sim_time_mean", "sim_time_network_mean",
+                   "dominates"), errors):
+        if not cc["dominates"]:
+            errors.append(
+                f"{name}: compute-coupled decode clock does not "
+                "strictly dominate the network-only schedule")
+    return errors
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_hierarchy.json": check_hierarchy,
     "BENCH_sim.json": check_sim,
+    "GRID_grid.json": check_grid,
 }
 
 
 def main() -> int:
     errors: list[str] = []
-    for fname, check in CHECKS.items():
+    # extra GRID_* artifacts (smoke runs, ad-hoc grids) are optional
+    # but must be well-formed when present
+    extra = sorted(p.name for p in ROOT.glob("GRID_*.json")
+                   if p.name not in CHECKS)
+    checks = dict(CHECKS)
+    checks.update({fname: check_grid for fname in extra})
+    for fname, check in checks.items():
         path = ROOT / fname
         if not path.exists():
             errors.append(f"{fname} missing (run the matching "
@@ -166,7 +264,7 @@ def main() -> int:
     for e in errors:
         print(f"check_bench: FAIL: {e}", file=sys.stderr)
     if not errors:
-        print(f"check_bench: OK ({', '.join(CHECKS)})")
+        print(f"check_bench: OK ({', '.join(checks)})")
     return 1 if errors else 0
 
 

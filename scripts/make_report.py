@@ -1,12 +1,17 @@
 """Build the §Dry-run and §Roofline tables of EXPERIMENTS.md from
-EXPERIMENTS/dryrun_results.json.
+EXPERIMENTS/dryrun_results.json, or render a scenario-grid artifact:
 
     PYTHONPATH=src python scripts/make_report.py
+    PYTHONPATH=src python scripts/make_report.py --grid GRID_grid.json
 """
 from __future__ import annotations
 
 import json
+import pathlib
 import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCH_ORDER = [
@@ -135,5 +140,17 @@ def main(path: str = "EXPERIMENTS/dryrun_results.json") -> None:
     perf_table()
 
 
+def grid_report(path: str = "GRID_grid.json") -> None:
+    """§Grid: the scenario-grid summary table (repro.grid renderer —
+    the same markdown the grid CLI writes next to its JSON)."""
+    from repro.grid.report import markdown_report
+    with open(path) as f:
+        print(markdown_report(json.load(f)), end="")
+
+
 if __name__ == "__main__":
+    if "--grid" in sys.argv:
+        i = sys.argv.index("--grid")
+        grid_report(*sys.argv[i + 1:i + 2])
+        sys.exit(0)
     main(*sys.argv[1:])

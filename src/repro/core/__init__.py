@@ -2,12 +2,13 @@
 from . import (channel, coupon, dist, fednc, gf, hierarchy, packets,
                rlnc, security)
 from .fednc import FedNCConfig, RoundResult, fedavg_round, fednc_round
-from .gf import get_field, ge_solve, rank
+from .gf import ge_solve, get_field, rank
 from .packets import packet_to_pytree, pytree_to_packet
 from .rlnc import EncodedBatch, decode, encode, random_coding_matrix
 
 __all__ = [
-    "channel", "coupon", "dist", "fednc", "gf", "packets", "rlnc",
+    "channel", "coupon", "dist", "fednc", "gf", "hierarchy",
+    "packets", "rlnc",
     "security", "FedNCConfig", "RoundResult", "fedavg_round",
     "fednc_round", "get_field", "ge_solve", "rank",
     "packet_to_pytree", "pytree_to_packet", "EncodedBatch", "decode",

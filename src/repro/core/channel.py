@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,6 +58,9 @@ class AsyncChannelReport(ChannelReport):
     many arrivals) an async server had what it needed."""
     consumed: int = -1              # arrivals until rank K (Prop. 1)
     sim_time: float = float("nan")  # simulated clock at decode
+    # decode time of the network-only schedule (no compute coupling);
+    # equals sim_time when no ComputeModel was in play
+    sim_time_network: float = float("nan")
 
 
 @dataclass(frozen=True)
@@ -92,6 +94,20 @@ class ArrivalSchedule:
         if not 1 <= g <= self.n:
             raise ValueError(f"arrival count {g} outside 1..{self.n}")
         return float(np.asarray(self.times)[self.order[g - 1]])
+
+    def offset_by(self, offsets) -> "ArrivalSchedule":
+        """A new schedule with per-packet `offsets` (transmission
+        order) added to the times — how local-training compute couples
+        into the clock: a packet cannot leave before its source client
+        finished computing.  Re-sorting is free (`order` is derived),
+        and with nonnegative offsets every order statistic of the new
+        schedule weakly dominates the old one."""
+        offsets = np.asarray(offsets, np.float64)
+        times = np.asarray(self.times, np.float64)
+        if offsets.shape != times.shape:
+            raise ValueError(
+                f"offsets shape {offsets.shape} != times {times.shape}")
+        return ArrivalSchedule(times + offsets)
 
 
 @dataclass(frozen=True)

@@ -23,7 +23,6 @@ asserted by tests/test_dist.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

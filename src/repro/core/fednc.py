@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.defaults import DEFAULT_CHUNK_L
+
 from . import packets as pkt
 from .channel import ChannelReport
 from .rlnc import EncodedBatch
@@ -186,7 +187,6 @@ def fednc_round(client_params: Sequence[Any], weights: Sequence[float],
 def fedavg_round(client_params: Sequence[Any], weights: Sequence[float],
                  prev_global: Any, channel=None) -> RoundResult:
     """Classic FedAvg baseline (paper §II-A), same channel interface."""
-    K = len(client_params)
     w = np.asarray(weights, np.float32)
     if channel is not None:
         stacked = pkt.pytrees_to_packets(client_params, s=8)[0]

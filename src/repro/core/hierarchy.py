@@ -26,8 +26,8 @@ path as the bit-exactness oracle and benchmark baseline.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp

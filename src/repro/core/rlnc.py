@@ -12,7 +12,6 @@ counts: a relay holding tuples (A, C) emits fresh random combinations
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -38,10 +38,8 @@ def simulate_error_probability(K: int, s: int, eta: int, trials: int,
     import jax.numpy as jnp
 
     from .channel import MultiHopChannel
-    from .gf import get_field
     from .rlnc import EncodedBatch, random_coding_matrix
 
-    field = get_field(s)
     rng = np.random.default_rng(seed)
     failures = 0
     for t in range(trials):

@@ -15,7 +15,7 @@ stream.py   — StreamDecoder: the selector's reduced-basis state turned
 
 See docs/engine.md and docs/simulator.md for the architecture guides.
 """
-from .engine import (CodingEngine, DEFAULT_CHUNK_L, EngineConfig,
+from .engine import (DEFAULT_CHUNK_L, CodingEngine, EngineConfig,
                      EngineRound, get_engine)
 from .registry import (available_kernels, gf_matmul, register_kernel,
                        resolve_kernel, resolve_kernel_name)

@@ -48,6 +48,7 @@ from repro.core import packets as pkt
 from repro.core.channel import ChannelReport, RowGather, RowMix
 from repro.core.gf import get_field, invert
 from repro.core.rlnc import EncodedBatch
+
 from .defaults import DEFAULT_CHUNK_L
 from .registry import resolve_kernel
 from .select import incremental_select

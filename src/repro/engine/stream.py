@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.gf import get_field
 from repro.core.rlnc import EncodedBatch
+
 from .select import reduce_insert
 
 

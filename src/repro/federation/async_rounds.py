@@ -15,16 +15,26 @@ yields the two temporal quantities Prop. 1 is actually about:
 strategy's ``schedule_fn``, which is how the network simulator's
 scenario axis (straggler profile, bandwidth scale) plugs into real
 FL training runs.
+
+Passing a :class:`repro.sim.ComputeModel` as ``compute`` closes the
+remaining temporal gap: each cohort member gets a simulated local-
+training time (modeled FLOP draw, or its *measured* training wall
+seconds rescaled), and every packet it sources is delayed by it — the
+arrival clock then covers compute + network end to end, and each
+round's log carries both ``sim_time`` (coupled) and
+``sim_time_network`` (the network-only schedule) so the compute
+contribution is directly measurable.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.core.channel import ArrivalSchedule
+
 from .rounds import FLExperiment, train_cohort
 
 
@@ -34,10 +44,12 @@ class AsyncRoundLog:
     decoded: bool
     n_aggregated: int
     consumed: int         # arrivals until rank K
-    sim_time: float       # simulated clock at decode
+    sim_time: float       # simulated clock at decode (compute-coupled
+                          # when a ComputeModel is configured)
     train_loss: float
     test_acc: float
     wall_s: float
+    sim_time_network: float = float("nan")   # network-only decode time
 
 
 def blind_box_schedule(gap=None, rate_scale: float = 1.0
@@ -45,7 +57,10 @@ def blind_box_schedule(gap=None, rate_scale: float = 1.0
                                      ArrivalSchedule]:
     """Arrival schedule factory: i.i.d. gaps from a `repro.sim`
     DistSpec (default unit exponential — the memoryless multicast of
-    paper §IV-A), cumulated into arrival times."""
+    paper §IV-A), cumulated into arrival times.  Compute coupling
+    happens downstream: `AsyncFedNCStrategy` attributes each packet a
+    random source client and shifts this schedule with
+    :meth:`~repro.core.channel.ArrivalSchedule.offset_by`."""
     def make(n: int, rng: np.random.Generator) -> ArrivalSchedule:
         from repro.sim.distributions import DistSpec
         spec = gap if gap is not None else DistSpec()
@@ -56,26 +71,41 @@ def blind_box_schedule(gap=None, rate_scale: float = 1.0
 
 def run_async_experiment(exp: FLExperiment, init_params: Any,
                          rounds: int, *, eval_every: int = 1,
+                         compute: Optional[Any] = None,
                          verbose: bool = False) -> list[AsyncRoundLog]:
     """`rounds.run_experiment`, but the strategy's report must carry
     the async fields (consumed / sim_time) — i.e. AsyncFedNCStrategy
     or anything quacking like it.  Cohort sampling and local training
     are the shared `rounds.train_cohort`, so async and lockstep runs
-    stay comparable."""
+    stay comparable.
+
+    `compute` (a :class:`repro.sim.ComputeModel`) adds each client's
+    simulated local-training time into its packets' arrival clock —
+    the round is then genuinely asynchronous end to end: fast clients'
+    packets are heard while slow clients are still computing."""
     rng = np.random.default_rng(exp.seed)
     global_params = init_params
     logs: list[AsyncRoundLog] = []
 
     for t in range(rounds):
         t0 = time.perf_counter()
-        client_params, weights, loss = train_cohort(exp, rng,
-                                                    global_params)
-        result = exp.strategy.aggregate(client_params, weights,
-                                        global_params, rng)
+        client_params, weights, loss, walls = train_cohort(
+            exp, rng, global_params)
+        if compute is not None:
+            ct = compute.times(rng, len(client_params),
+                               measured_wall=walls)
+            result = exp.strategy.aggregate(client_params, weights,
+                                            global_params, rng,
+                                            compute_times=ct)
+        else:
+            result = exp.strategy.aggregate(client_params, weights,
+                                            global_params, rng)
         global_params = result.global_params
         rep = result.report
         consumed = getattr(rep, "consumed", -1)
         sim_time = getattr(rep, "sim_time", float("nan"))
+        sim_time_network = getattr(rep, "sim_time_network",
+                                   float("nan"))
 
         acc = float("nan")
         if (t + 1) % eval_every == 0:
@@ -84,9 +114,10 @@ def run_async_experiment(exp: FLExperiment, init_params: Any,
         logs.append(AsyncRoundLog(t, bool(result.decoded),
                                   result.n_aggregated, int(consumed),
                                   float(sim_time), loss, acc,
-                                  time.perf_counter() - t0))
+                                  time.perf_counter() - t0,
+                                  float(sim_time_network)))
         if verbose:
             print(f"round {t:3d} decoded={result.decoded} "
                   f"consumed={consumed} sim_t={sim_time:.3f} "
-                  f"acc={acc:.4f}")
+                  f"net_t={sim_time_network:.3f} acc={acc:.4f}")
     return logs

@@ -8,14 +8,13 @@ benchmarks (Fig. 3 / Fig. 4 / Table I).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import SyntheticImageDataset, batches
+
 from .client import LocalTrainer
 
 
@@ -45,27 +44,33 @@ class FLExperiment:
 
 def train_cohort(exp: FLExperiment, rng: np.random.Generator,
                  global_params: Any
-                 ) -> tuple[list, np.ndarray, float]:
+                 ) -> tuple[list, np.ndarray, float, np.ndarray]:
     """Sample this round's participants and run local training.
 
     Shared by the lockstep and async round drivers (identical RNG
     consumption, so their client sampling stays comparable).  Returns
-    (client_params, normalized size weights, mean local loss)."""
+    (client_params, normalized size weights, mean local loss,
+    per-client training wall seconds) — the wall times feed the
+    *measured* mode of :class:`repro.sim.ComputeModel`, which couples
+    local compute into the async arrival schedule."""
     N = len(exp.partitions)
     part = rng.choice(N, size=exp.clients_per_round, replace=False)
-    client_params, losses, sizes = [], [], []
+    client_params, losses, sizes, walls = [], [], [], []
     for k in part:
         idx = exp.partitions[k]
         ds_k = exp.dataset.subset(idx)
         it = batches(ds_k, min(exp.batch_size, max(len(ds_k), 1)),
                      seed=int(rng.integers(0, 2**31 - 1)),
                      epochs=exp.trainer.local_epochs)
+        t0 = time.perf_counter()
         p_k, loss_k = exp.trainer.train(global_params, it)
+        walls.append(time.perf_counter() - t0)
         client_params.append(p_k)
         losses.append(loss_k)
         sizes.append(len(ds_k))
     weights = np.asarray(sizes, np.float32)
-    return client_params, weights / weights.sum(), float(np.mean(losses))
+    return (client_params, weights / weights.sum(),
+            float(np.mean(losses)), np.asarray(walls, np.float64))
 
 
 def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
@@ -77,8 +82,8 @@ def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
 
     for t in range(rounds):
         t0 = time.perf_counter()
-        client_params, weights, loss = train_cohort(exp, rng,
-                                                    global_params)
+        client_params, weights, loss, _ = train_cohort(exp, rng,
+                                                       global_params)
         result = exp.strategy.aggregate(client_params, weights,
                                         global_params, rng)
         global_params = result.global_params

@@ -97,6 +97,16 @@ class AsyncFedNCStrategy:
     for the whole batch.  The report records how many arrivals were
     consumed and the simulated clock at decode, so round loops can
     plot time-to-decode instead of just decode/no-decode.
+
+    When the driver passes per-client ``compute_times`` (see
+    `repro.sim.ComputeModel` and ``run_async_experiment``), each
+    multicast tuple is attributed a uniformly random source client —
+    the blind box again — and delayed by that client's local-training
+    time: packets from fast clients arrive while slow clients still
+    compute.  The report then carries both clocks (``sim_time``
+    coupled, ``sim_time_network`` network-only, from the same gap
+    draws), so the compute contribution to time-to-decode is a
+    measurement, not a model assumption.
     """
 
     config: FedNCConfig = field(default_factory=FedNCConfig)
@@ -108,8 +118,9 @@ class AsyncFedNCStrategy:
 
     def aggregate(self, client_params: Sequence[Any],
                   weights: Sequence[float], prev_global: Any,
-                  rng: np.random.Generator) -> RoundResult:
-        from repro.engine.stream import stream_decode
+                  rng: np.random.Generator, *,
+                  compute_times=None) -> RoundResult:
+        from repro.engine.stream import StreamDecoder, stream_decode
         cfg = self.config
         engine = fednc_mod.engine_for(cfg)
         # the config-honoring helpers: quantize_bits via packetize,
@@ -120,18 +131,43 @@ class AsyncFedNCStrategy:
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
         batch = engine.encode(P, engine.coding_matrix(key, n, K))
         if self.schedule_fn is not None:
-            sched = self.schedule_fn(n, rng)
-            if sched.n != n:
+            sched_net = self.schedule_fn(n, rng)
+            if sched_net.n != n:
                 raise ValueError(
-                    f"schedule covers {sched.n} arrivals, need {n}")
+                    f"schedule covers {sched_net.n} arrivals, need {n}")
         else:
-            sched = ArrivalSchedule(np.arange(1, n + 1, dtype=float))
+            sched_net = ArrivalSchedule(np.arange(1, n + 1, dtype=float))
+        if compute_times is not None:
+            ct = np.asarray(compute_times, np.float64)
+            if ct.shape[0] != K:
+                raise ValueError(
+                    f"compute_times covers {ct.shape[0]} clients, "
+                    f"need {K}")
+            # blind-box source attribution: each multicast tuple waits
+            # for a uniformly random client's local training
+            sources = rng.integers(0, K, size=n)
+            sched = sched_net.offset_by(ct[sources])
+        else:
+            sched = sched_net
         ok, P_hat, consumed = stream_decode(batch, cfg.s,
                                             order=sched.order)
+        sim_time = sched.time_of(consumed) if consumed else 0.0
+        if compute_times is None:
+            sim_time_network = sim_time
+        else:
+            # the counterfactual clock: same gap draws, no compute.
+            # Rank-only replay (L=0) — one tiny scan over the coding
+            # vectors, no payload traffic.
+            rank_dec = StreamDecoder(K=K, L=0, s=cfg.s)
+            rank_dec.ingest(batch.A[jnp.asarray(sched_net.order,
+                                                jnp.int32)])
+            g_net = rank_dec.decoded_at or consumed
+            sim_time_network = (sched_net.time_of(g_net)
+                                if g_net else 0.0)
         report = AsyncChannelReport(
             sent=n, delivered=consumed, decodable=bool(ok),
-            consumed=consumed,
-            sim_time=sched.time_of(consumed) if consumed else 0.0)
+            consumed=consumed, sim_time=sim_time,
+            sim_time_network=sim_time_network)
         if not ok:
             return RoundResult(prev_global, False, report, 0)
         agg = fednc_mod.aggregate_decoded(P_hat, spec, weights, cfg,

@@ -1,0 +1,40 @@
+"""repro.grid — the declarative scenario-grid runner.
+
+FedNC's headline claims (Prop. 1 efficiency, straggler/dropout
+robustness, the §III hierarchy) are temporal and *regime-dependent*:
+a single straggler profile or a single population size proves very
+little.  This package turns "measure everything" into a declarative
+matrix:
+
+spec.py    — :class:`GridAxes` (the cartesian axes: straggler
+             distribution, delay reordering, dropout, population size,
+             strategy, GF kernel backend) expanded into frozen,
+             picklable :class:`ScenarioSpec` records with stable
+             per-scenario seeds (``crc32(name) ^ base_seed`` — adding
+             or reordering axes never reseeds existing scenarios).
+execute.py — one executor per strategy family: the network-simulator
+             strategies run :class:`repro.sim.NetworkSimulator`, the
+             hierarchical ones run the engine's fused
+             ``multi_edge_round``, and the async-FL ones run
+             ``federation.async_rounds.run_async_experiment`` with a
+             compute-coupled arrival schedule.  ``run_grid`` fans
+             scenarios over worker *processes* (spawn context — each
+             worker owns its own jax runtime).
+report.py  — the ``GRID_*.json`` artifact (schema-checked by
+             ``scripts/check_bench.py`` exactly like ``BENCH_*.json``)
+             and its markdown summary table (also reachable via
+             ``python scripts/make_report.py --grid``).
+__main__   — ``python -m repro.grid`` CLI; ``--smoke`` is the tiny
+             2x2 grid CI runs end to end on every push.
+
+See docs/grid.md for the axes, the schema, and the CI wiring.
+"""
+from .execute import run_grid, run_scenario
+from .report import GRID_SCHEMA, grid_document, markdown_report
+from .spec import GridAxes, ScenarioSpec, scenario_seed
+
+__all__ = [
+    "GridAxes", "ScenarioSpec", "scenario_seed",
+    "run_grid", "run_scenario",
+    "GRID_SCHEMA", "grid_document", "markdown_report",
+]

@@ -1,0 +1,103 @@
+"""``python -m repro.grid`` — run a scenario grid from the command line.
+
+    PYTHONPATH=src python -m repro.grid --smoke          # CI's 2x2 grid
+    PYTHONPATH=src python -m repro.grid \
+        --strategies fednc_stream fedavg hier:4 \
+        --stragglers lognormal pareto --populations 1000 100000 \
+        --rounds 30 --jobs 2 --out mygrid
+
+Writes ``GRID_<out>.json`` (schema ``fednc-grid-v1``, validated by
+``scripts/check_bench.py``) and ``GRID_<out>.md`` (the markdown
+summary, same renderer as ``scripts/make_report.py --grid``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from .execute import run_grid
+from .report import grid_document, markdown_report
+from .spec import GridAxes
+
+
+def smoke_axes() -> GridAxes:
+    """The CI smoke grid: 2 strategies x 2 stragglers, small enough to
+    finish well under a minute on two CPU cores yet covering both the
+    StreamDecoder and the blind-box collector paths."""
+    return GridAxes(
+        strategy=("fednc_stream", "fedavg"),
+        straggler=("exponential", "pareto"),
+        population=(2_000,),
+        clients_per_round=32,
+        rounds=10,
+        base_seed=7,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.grid",
+        description="declarative FedNC scenario-grid runner")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the tiny 2x2 CI grid (GRID_smoke.json)")
+    ap.add_argument("--strategies", nargs="+",
+                    default=["fednc_stream", "fedavg"])
+    ap.add_argument("--stragglers", nargs="+",
+                    default=["exponential", "pareto"])
+    ap.add_argument("--delay-spreads", nargs="+", type=float,
+                    default=[0.0])
+    ap.add_argument("--dropouts", nargs="+", type=float, default=[0.0])
+    ap.add_argument("--populations", nargs="+", type=int,
+                    default=[10_000])
+    ap.add_argument("--kernels", nargs="+", default=["auto"])
+    ap.add_argument("--clients-per-round", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--jobs", type=int, default=2,
+                    help="worker processes (1 = in-process)")
+    ap.add_argument("--out", default=None,
+                    help="artifact suffix: GRID_<out>.json/.md "
+                         "(default: 'smoke' with --smoke, else 'cli')")
+    ap.add_argument("--outdir", default=".",
+                    help="directory for the GRID_* artifacts")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        axes = smoke_axes()
+        out = args.out or "smoke"
+    else:
+        axes = GridAxes(
+            strategy=tuple(args.strategies),
+            straggler=tuple(args.stragglers),
+            delay_spread=tuple(args.delay_spreads),
+            p_dropout=tuple(args.dropouts),
+            population=tuple(args.populations),
+            kernel=tuple(args.kernels),
+            clients_per_round=args.clients_per_round,
+            rounds=args.rounds, base_seed=args.seed)
+        out = args.out or "cli"
+
+    specs = axes.expand()
+    print(f"grid: {len(specs)} scenarios, jobs={args.jobs}", flush=True)
+    t0 = time.perf_counter()
+    results = run_grid(specs, jobs=args.jobs,
+                       progress=lambda s: print(f"  {s}", flush=True))
+    wall = time.perf_counter() - t0
+
+    doc = grid_document(axes.config(), results)
+    doc["wall_s"] = wall
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    json_path = outdir / f"GRID_{out}.json"
+    md_path = outdir / f"GRID_{out}.md"
+    json_path.write_text(json.dumps(doc, indent=2))
+    md_path.write_text(markdown_report(doc))
+    print(f"wrote {json_path} and {md_path} ({wall:.1f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,3 +10,5 @@ ref.py       — pure-jnp formulations: table-based oracle + interpret-free
                clmul/lane-packed mirrors of the kernels
 """
 from . import ops, ref
+
+__all__ = ["ops", "ref"]

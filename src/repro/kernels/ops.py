@@ -17,9 +17,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .flash_attention import flash_attention
 from .gf2_xor import gf2_matmul_pallas
-from . import ref
 
 
 def _on_tpu() -> bool:

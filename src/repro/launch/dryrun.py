@@ -19,7 +19,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ cover all 4 shapes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,12 +20,10 @@ launch/roofline.py then reads back out of the compiled HLO.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig

@@ -17,11 +17,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import get_config, reduced_config
 from repro.data.tokens import make_token_stream
-from repro.launch import sharding as sh
 from repro.launch.steps import make_train_step
 from repro.models import transformer as tf
 from repro.optim import adamw, linear_warmup_cosine

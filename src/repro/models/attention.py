@@ -9,7 +9,7 @@ optional perf path; XLA fuses this one well on TPU).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,6 @@ running statistics travel inside the FedNC packets exactly like
 weights (they are part of w_k)."""
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -20,7 +20,7 @@ Block kinds:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax.numpy as jnp

@@ -15,14 +15,13 @@ all-to-alls / reduce-scatters on that axis.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .config import ModelConfig, MoEConfig
-from .layers import dense_init, dense_apply, mlp_init, mlp_apply
+from .layers import dense_apply, dense_init, mlp_apply, mlp_init
 
 TARGET_GROUP = 8192    # tokens routed together (global)
 

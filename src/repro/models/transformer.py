@@ -14,11 +14,10 @@ Modes:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import attention as attn
 from . import moe as moe_mod

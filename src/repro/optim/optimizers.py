@@ -1,7 +1,7 @@
 """SGD / momentum / Adam / AdamW, schedule-aware."""
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Union
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp

@@ -26,15 +26,16 @@ simulator.py     — NetworkSimulator: runs FedNC (stop at rank K via
 
 See docs/simulator.md for the event model and the Prop.-1 validation.
 """
-from .distributions import (DistSpec, STRAGGLER_PROFILES,
+from .compute import ComputeModel
+from .distributions import (STRAGGLER_PROFILES, DistSpec,
                             register_distribution, sample_delays)
 from .events import RoundEvents, arrival_stream
 from .population import ClientPopulation, PopulationConfig
 from .simulator import NetworkSimulator, RoundStats, SimConfig, SimTrace
 
 __all__ = [
-    "DistSpec", "STRAGGLER_PROFILES", "register_distribution",
-    "sample_delays", "RoundEvents", "arrival_stream",
-    "ClientPopulation", "PopulationConfig",
+    "ComputeModel", "DistSpec", "STRAGGLER_PROFILES",
+    "register_distribution", "sample_delays", "RoundEvents",
+    "arrival_stream", "ClientPopulation", "PopulationConfig",
     "NetworkSimulator", "RoundStats", "SimConfig", "SimTrace",
 ]

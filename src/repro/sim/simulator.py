@@ -36,8 +36,9 @@ from typing import Optional
 import numpy as np
 
 from repro.core.coupon import expected_draws_fedavg_asymptotic
+
 from .distributions import DistSpec
-from .events import RoundEvents, arrival_stream
+from .events import arrival_stream
 from .population import ClientPopulation, PopulationConfig
 
 

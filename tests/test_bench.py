@@ -28,22 +28,66 @@ def test_check_bench_passes():
         f"benchmark artifacts drifted:\n{proc.stderr}\n{proc.stdout}")
 
 
+def _doctored_tree(tmp_path, replace: dict) -> pathlib.Path:
+    """Copy the checker + every artifact into a tmp repo, overriding
+    the artifacts named in `replace` with doctored JSON."""
+    root = tmp_path / "repo"
+    (root / "scripts").mkdir(parents=True, exist_ok=True)
+    (root / "scripts" / "check_bench.py").write_text(
+        (ROOT / "scripts" / "check_bench.py").read_text())
+    for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json",
+                  "BENCH_sim.json", "GRID_grid.json",
+                  "GRID_smoke.json"):
+        data = (json.dumps(replace[fname]) if fname in replace
+                else (ROOT / fname).read_text())
+        (root / fname).write_text(data)
+    return root
+
+
+def _run_doctored(root) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(root / "scripts" / "check_bench.py")],
+        capture_output=True, text=True, timeout=120,
+        env=dict(os.environ))
+
+
 def test_check_bench_catches_broken_sim_artifact(tmp_path):
     """A violated bar (draw ratio off by >10%) must fail the checker:
     copy the tree's checker next to a doctored BENCH_sim.json."""
     sim = json.loads((ROOT / "BENCH_sim.json").read_text())
     key = next(k for k in sim if k.startswith("sim_pop"))
     sim[key]["draw_ratio_rel_err"] = 0.5
-    root = tmp_path / "repo"
-    (root / "scripts").mkdir(parents=True)
-    (root / "scripts" / "check_bench.py").write_text(
-        (ROOT / "scripts" / "check_bench.py").read_text())
-    for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json"):
-        (root / fname).write_text((ROOT / fname).read_text())
-    (root / "BENCH_sim.json").write_text(json.dumps(sim))
-    env = dict(os.environ)
-    proc = subprocess.run(
-        [sys.executable, str(root / "scripts" / "check_bench.py")],
-        capture_output=True, text=True, timeout=120, env=env)
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_sim.json": sim}))
     assert proc.returncode == 1
     assert "Prop. 1" in proc.stderr
+
+
+def test_check_bench_catches_broken_grid_artifact(tmp_path):
+    """The GRID schema bars: a full grid whose compute-coupled clock
+    stopped dominating, or whose delay sweep stopped inflating FedAvg,
+    must fail."""
+    grid = json.loads((ROOT / "GRID_grid.json").read_text())
+    grid["compute_coupling"]["dominates"] = False
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_grid.json": grid}))
+    assert proc.returncode == 1
+    assert "dominate" in proc.stderr
+
+    grid = json.loads((ROOT / "GRID_grid.json").read_text())
+    grid["delay_sweep"]["inflation"][-1] = 1.0
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_grid.json": grid}))
+    assert proc.returncode == 1
+    assert "inflation" in proc.stderr
+
+
+def test_check_bench_catches_grid_missing_seed(tmp_path):
+    """Every scenario entry must carry its own seed (reproducibility
+    is the point of the grid) — smoke artifacts included."""
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    next(iter(smoke["scenarios"].values())).pop("seed")
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "seed" in proc.stderr

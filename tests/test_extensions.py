@@ -2,14 +2,13 @@
 §III's suggested deployment), sparse RLNC, and quantized packets
 (paper ref [22])."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import fednc, hierarchy
 from repro.core.channel import ErasureChannel
 from repro.core.fednc import FedNCConfig
-from repro.core.gf import get_field, rank as gf_rank
+from repro.core.gf import get_field
 from repro.core.rlnc import sparse_coding_matrix
 
 

@@ -4,14 +4,13 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.channel import BlindBoxChannel
 from repro.core.fednc import FedNCConfig
-from repro.data import make_image_dataset, mixed_noniid_partition, \
-    iid_partition
+from repro.data import iid_partition, make_image_dataset
 from repro.federation import (FedAvgStrategy, FedNCStrategy, FLExperiment,
                               LocalTrainer, run_experiment)
 from repro.federation.rounds import final_accuracy
-from repro.models.cnn import merge_bn_stats, cnn_accuracy, cnn_loss, init_cnn
+from repro.models.cnn import (cnn_accuracy, cnn_loss, init_cnn,
+                              merge_bn_stats)
 from repro.optim import adam
 
 

@@ -1,7 +1,6 @@
 """GF(2^s) field properties (hypothesis) + Gaussian elimination."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "

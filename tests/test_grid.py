@@ -1,0 +1,278 @@
+"""The scenario-grid runner: spec expansion, executors, artifacts,
+and the compute-coupled arrival schedule (ROADMAP closure items)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.channel import ArrivalSchedule
+from repro.grid import (GridAxes, grid_document, markdown_report,
+                        run_grid, run_scenario, scenario_seed)
+from repro.grid.spec import with_rounds
+
+# ---------------------------------------------------------------------------
+# Spec expansion
+# ---------------------------------------------------------------------------
+
+
+def test_expand_is_cartesian_and_deduplicated():
+    g = GridAxes(strategy=("fednc_stream", "fedavg"),
+                 straggler=("exponential", "pareto"),
+                 population=(1000, 2000),
+                 kernel=("jnp", "jnp_packed"))
+    specs = g.expand()
+    # kernel never touches the simulator strategies, so the kernel
+    # axis collapses instead of duplicating every sim cell
+    assert len(specs) == 2 * 2 * 2
+    assert len({s.name for s in specs}) == len(specs)
+    assert all(s.kernel == "-" for s in specs)
+
+
+def test_hier_normalization_collapses_stream_axes():
+    g = GridAxes(strategy=("hier:4",), straggler=("pareto",),
+                 delay_spread=(0.0, 5.0), kernel=("jnp",),
+                 clients_per_round=8)
+    specs = g.expand()
+    assert len(specs) == 1
+    assert specs[0].num_edges == 4
+    assert specs[0].delay_spread == 0.0 and specs[0].straggler == "-"
+
+
+def test_seeds_are_stable_under_grid_growth():
+    small = GridAxes(strategy=("fedavg",), straggler=("pareto",))
+    big = GridAxes(strategy=("fednc_stream", "fedavg", "hier:2"),
+                   straggler=("constant", "exponential", "pareto"),
+                   population=(10_000, 100_000))
+    by_name = {s.name: s.seed for s in big.expand()}
+    for s in small.expand():
+        assert by_name[s.name] == s.seed == scenario_seed(s.name, 0)
+    # different base seed -> different seeds, same names
+    assert (scenario_seed("x", 0) != scenario_seed("x", 1))
+
+
+def test_with_rounds_keeps_identity():
+    s = GridAxes().expand()[0]
+    s2 = with_rounds(s, 99)
+    assert s2.rounds == 99 and s2.name == s.name and s2.seed == s.seed
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError):
+        GridAxes(strategy=("bogus",)).expand()
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+def test_sim_scenario_reports_draw_ratio_fields():
+    spec = GridAxes(strategy=("fednc_stream",),
+                    straggler=("exponential",), population=(500,),
+                    clients_per_round=16, rounds=4).expand()[0]
+    entry = run_scenario(spec)
+    assert entry["seed"] == spec.seed
+    assert entry["axes"]["strategy"] == "fednc_stream"
+    assert entry["fednc_decode_rate"] == 1.0
+    assert entry["fednc_draws_mean"] >= 16
+    assert entry["fedavg_draws_mean"] > entry["fednc_draws_mean"]
+    assert np.isfinite(entry["draw_ratio"])
+    # inflation is vs K·H(K); without reordering it hovers around 1
+    assert 0.5 < entry["fedavg_inflation"] < 1.6
+
+
+def test_sim_scenario_is_deterministic():
+    spec = GridAxes(strategy=("fedavg",), straggler=("pareto",),
+                    population=(500,), clients_per_round=16,
+                    rounds=4).expand()[0]
+    a, b = run_scenario(spec), run_scenario(spec)
+    a.pop("wall_s"), b.pop("wall_s")
+    assert a == b
+
+
+def test_delay_reordering_inflates_fedavg():
+    """The regime Prop. 1 cannot see: per-client reorder offsets push
+    FedAvg's last coupon later, FedNC's rank law does not care."""
+    mk = lambda d: GridAxes(strategy=("fedavg",),
+                            straggler=("exponential",),
+                            delay_spread=(d,), population=(2000,),
+                            clients_per_round=32, rounds=25,
+                            base_seed=5).expand()[0]
+    base = run_scenario(mk(0.0))
+    wide = run_scenario(mk(8.0))
+    assert wide["fedavg_inflation"] > 1.2 * base["fedavg_inflation"]
+
+
+def test_hier_scenario_decodes_through_kernel_axis():
+    spec = GridAxes(strategy=("hier:2",), kernel=("jnp",),
+                    clients_per_round=6, rounds=1).expand()[0]
+    entry = run_scenario(spec)
+    assert entry["decode_rate"] == 1.0
+    assert entry["kernel_resolved"] == "jnp"
+    assert entry["num_edges"] == 2
+
+
+def test_run_grid_serial_matches_scenarios():
+    specs = GridAxes(strategy=("fedavg",),
+                     straggler=("exponential", "pareto"),
+                     population=(500,), clients_per_round=16,
+                     rounds=3).expand()
+    results = run_grid(specs, jobs=1)
+    assert list(results) == [s.name for s in specs]
+    for s in specs:
+        solo = run_scenario(s)
+        solo.pop("wall_s")
+        got = dict(results[s.name])
+        got.pop("wall_s")
+        assert got == solo
+
+
+@pytest.mark.slow
+def test_run_grid_process_parallel_matches_serial():
+    """jobs=2 spawns fresh-interpreter workers; results must be
+    bit-identical to in-process execution."""
+    specs = GridAxes(strategy=("fedavg", "fednc_stages"),
+                     straggler=("pareto",), population=(500,),
+                     clients_per_round=16, rounds=3).expand()
+    serial = run_grid(specs, jobs=1)
+    parallel = run_grid(specs, jobs=2)
+    for name in serial:
+        a, b = dict(serial[name]), dict(parallel[name])
+        a.pop("wall_s"), b.pop("wall_s")
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Compute coupling (the ROADMAP item this PR closes)
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_schedule_offset_by():
+    sched = ArrivalSchedule(np.asarray([3.0, 1.0, 2.0]))
+    shifted = sched.offset_by(np.asarray([0.0, 5.0, 0.0]))
+    assert np.allclose(shifted.times, [3.0, 6.0, 2.0])
+    # re-sorting is derived: the slow packet moved to the back
+    assert shifted.order.tolist() == [2, 0, 1]
+    with pytest.raises(ValueError):
+        sched.offset_by(np.zeros(2))
+
+
+def test_compute_model_modes():
+    from repro.sim import ComputeModel, DistSpec
+    rng = np.random.default_rng(0)
+    t = ComputeModel(work=DistSpec("constant", 2.0, 0.0),
+                     flops_per_second=4.0).times(rng, 5)
+    assert np.allclose(t, 0.5)
+    m = ComputeModel(measured_scale=10.0).times(
+        rng, 3, measured_wall=np.asarray([0.1, 0.2, 0.3]))
+    assert np.allclose(m, [1.0, 2.0, 3.0])
+    with pytest.raises(ValueError):
+        ComputeModel(measured_scale=1.0).times(rng, 3)
+
+
+def test_async_strategy_compute_coupling_dominates():
+    import jax.numpy as jnp
+
+    from repro.core.fednc import FedNCConfig
+    from repro.federation import AsyncFedNCStrategy, blind_box_schedule
+    params = [{"w": jnp.arange(16, dtype=jnp.float32) * (k + 1)}
+              for k in range(5)]
+    strat = AsyncFedNCStrategy(config=FedNCConfig(s=8), budget=20,
+                               schedule_fn=blind_box_schedule())
+    w = np.full(5, 0.2, np.float32)
+    rng = np.random.default_rng(3)
+    ct = np.full(5, 2.5)
+    res = strat.aggregate(params, w, params[0], rng, compute_times=ct)
+    rep = res.report
+    assert res.decoded
+    # constant offsets shift every arrival by exactly 2.5: the decode
+    # clock dominates the network-only clock by construction
+    assert rep.sim_time > rep.sim_time_network > 0
+    assert rep.sim_time == pytest.approx(rep.sim_time_network + 2.5)
+    # and without coupling the two clocks coincide
+    res2 = strat.aggregate(params, w, params[0],
+                           np.random.default_rng(4))
+    assert res2.report.sim_time == res2.report.sim_time_network
+
+
+def test_blind_box_schedule_offset_by():
+    from repro.federation import blind_box_schedule
+    base = blind_box_schedule()(12, np.random.default_rng(7))
+    # the strategy's coupling step: per-packet source attribution,
+    # then offset_by with the sources' compute times
+    offs = np.full(4, 3.0)[np.random.default_rng(7).integers(0, 4, 12)]
+    coupled = base.offset_by(offs)
+    assert np.allclose(np.asarray(coupled.times),
+                       np.asarray(base.times) + 3.0)
+
+
+def test_async_compute_scenario_dominates_network_only():
+    spec = GridAxes(strategy=("async_compute",),
+                    straggler=("lognormal",), clients_per_round=4,
+                    rounds=2).expand()[0]
+    entry = run_scenario(spec)
+    assert entry["decode_rate"] == 1.0
+    assert entry["compute_dominates"] is True
+    assert entry["sim_time_mean"] > entry["sim_time_network_mean"]
+
+
+# ---------------------------------------------------------------------------
+# Artifact + report + CLI
+# ---------------------------------------------------------------------------
+
+
+def _tiny_doc():
+    axes = GridAxes(strategy=("fedavg",), straggler=("exponential",),
+                    population=(500,), clients_per_round=16, rounds=3)
+    results = run_grid(axes.expand(), jobs=1)
+    return grid_document(axes.config(), results)
+
+
+def test_grid_document_passes_check_bench_schema():
+    scripts = str(pathlib.Path(__file__).resolve().parent.parent
+                  / "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        import check_bench
+    finally:
+        sys.path.remove(scripts)
+    doc = _tiny_doc()
+    assert check_bench.check_grid("tiny", doc) == []
+    # a scenario without its seed must fail
+    broken = json.loads(json.dumps(doc))
+    next(iter(broken["scenarios"].values())).pop("seed")
+    assert any("seed" in e for e in check_bench.check_grid("t", broken))
+    # a sim scenario with null draw stats but no dropout must fail
+    broken2 = json.loads(json.dumps(doc))
+    next(iter(broken2["scenarios"].values()))["draw_ratio"] = None
+    assert any("draw_ratio" in e
+               for e in check_bench.check_grid("t", broken2))
+
+
+def test_markdown_report_renders_scenarios():
+    doc = _tiny_doc()
+    md = markdown_report(doc)
+    for name in doc["scenarios"]:
+        assert f"`{name}`" in md
+    assert "| scenario |" in md
+
+
+@pytest.mark.slow
+def test_cli_smoke_writes_valid_artifact(tmp_path):
+    """`python -m repro.grid --smoke` end to end: the CI smoke job."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.grid", "--smoke",
+         "--outdir", str(tmp_path), "--jobs", "1"],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": str(root / "src")},
+        cwd=str(root))
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads((tmp_path / "GRID_smoke.json").read_text())
+    assert doc["schema"] == "fednc-grid-v1"
+    assert len(doc["scenarios"]) == 4
+    assert (tmp_path / "GRID_smoke.md").exists()

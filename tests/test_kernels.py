@@ -13,8 +13,8 @@ import pytest
 
 from repro.core.gf import get_field
 from repro.kernels import ops, ref
-from repro.kernels.gf_matmul import gf_matmul_pallas
 from repro.kernels.gf2_xor import gf2_matmul_pallas
+from repro.kernels.gf_matmul import gf_matmul_pallas
 
 SHAPES = [
     (1, 1, 1),

@@ -1,6 +1,5 @@
 """Launch layer: input specs, shape table, roofline HLO analyzer."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config

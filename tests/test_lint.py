@@ -1,0 +1,24 @@
+"""The CI lint gate, reproduced locally when ruff is available.
+
+The container image does not ship ruff (it is a dev dependency,
+pinned in requirements-dev.txt and installed by the CI lint job), so
+this wrapper skips rather than fails where the tool is absent — same
+convention as the hypothesis importorskip in the property tests.
+"""
+import pathlib
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.skipif(shutil.which("ruff") is None,
+                    reason="ruff not installed (CI installs it from "
+                           "requirements-dev.txt)")
+def test_ruff_clean():
+    proc = subprocess.run(["ruff", "check", "."], cwd=ROOT,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, (
+        f"ruff violations:\n{proc.stdout}\n{proc.stderr}")

@@ -1,13 +1,12 @@
 """Prop. 2 error bound, Table-I error probabilities, eavesdropper."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import security
-from repro.core.channel import Eavesdropper, MultiHopChannel
+from repro.core.channel import Eavesdropper
 from repro.core.rlnc import EncodedBatch, random_coding_matrix
-
-import jax
-import jax.numpy as jnp
 
 
 def test_bound_matches_paper_table1():

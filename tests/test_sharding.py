@@ -4,8 +4,6 @@ Uses AbstractMesh (no real devices needed) to evaluate PartitionSpec
 rules against the production 16x16 topology inside the single-device
 test process."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

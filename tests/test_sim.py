@@ -20,8 +20,8 @@ from repro.core.gf import get_field, rank as gf_rank
 from repro.core.rlnc import EncodedBatch
 from repro.engine import (CodingEngine, EngineConfig, StreamDecoder,
                           incremental_select, stream_decode)
-from repro.sim import (DistSpec, NetworkSimulator, PopulationConfig,
-                       SimConfig, STRAGGLER_PROFILES, arrival_stream)
+from repro.sim import (STRAGGLER_PROFILES, DistSpec, NetworkSimulator,
+                       PopulationConfig, SimConfig, arrival_stream)
 
 
 # ---------------------------------------------------------------------------

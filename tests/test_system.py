@@ -14,11 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import reduced_config
 from repro.core import fednc
 from repro.core.channel import BlindBoxChannel
 from repro.core.fednc import FedNCConfig
 from repro.models import transformer as tf
-from repro.configs import reduced_config
 
 
 def test_fednc_round_on_transformer_params():
