@@ -10,6 +10,16 @@ reference before timing:
   * ``jnp_packed`` — the lane-packed kernel's ladder in pure jnp
                      (4 symbols per int32 lane), run through the
                      engine's chunked streaming executor
+  * ``jnp_packed_seeded`` — the same ladder with coefficients
+                     regenerated from 4-byte row seeds inside the
+                     matmul (no (n, K) operand), oracle-checked
+                     against the expanded materialized product
+
+Seeded wire-overhead rows quantify the K+L -> 4+L header shrink at
+K in {32, 128, 512} (``seeded_wire_overhead_K*``), and
+``seeded_vs_materialized_L*`` records the throughput ratio of the
+seeded ladder against its materialized sibling at matched shapes —
+both gated by ``scripts/check_bench.py``.
 
 On this CPU container the Pallas kernels run in interpret mode (a
 correctness harness, not a speed claim), so the packed-vs-unpacked
@@ -30,7 +40,9 @@ import jax
 import numpy as np
 
 from repro.core.gf import get_field
-from repro.engine import CodingEngine, EngineConfig
+from repro.core.packets import packet_wire_bytes
+from repro.core.seeds import draw_seeds, expand_rows
+from repro.engine import CodingEngine, EngineConfig, is_seeded_kernel
 from repro.kernels import ref
 
 from .common import emit, time_us
@@ -40,21 +52,27 @@ LANE_SWEEP = (1 << 16, 1 << 20, 1 << 22)
 CHUNK_L = 1 << 18
 K = 10
 S = 8
+WIRE_KS = (32, 128, 512)     # generation sizes for wire-overhead rows
+WIRE_L = 1 << 18             # payload symbols for wire-overhead rows
 
-KERNELS = ("jnp", "jnp_clmul", "jnp_packed")
+KERNELS = ("jnp", "jnp_clmul", "jnp_packed", "jnp_packed_seeded")
 
 
 def _bench_one(kernel: str, s: int, K: int, L: int) -> dict:
     f = get_field(s)
     key = jax.random.PRNGKey(0)
-    A = f.random_elements(key, (K, K))
+    if is_seeded_kernel(kernel):
+        rows = draw_seeds(key, K)
+        A = expand_rows(rows, K, s)     # the oracle's materialized view
+    else:
+        rows = A = f.random_elements(key, (K, K))
     P = f.random_elements(jax.random.fold_in(key, 1), (K, L))
     eng = CodingEngine(EngineConfig(s=s, kernel=kernel, chunk_l=CHUNK_L))
     # oracle check before timing: exact field math, any mismatch is a bug
-    got = eng.matmul(A, P)
+    got = eng.matmul(rows, P)
     want = ref.gf_matmul_ref(A, P, s)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    us = time_us(lambda: eng.matmul(A, P).block_until_ready(), iters=3)
+    us = time_us(lambda: eng.matmul(rows, P).block_until_ready(), iters=3)
     sym = K * L
     return {
         "us_per_call": us,
@@ -81,6 +99,23 @@ def run(json_path: str = "BENCH_kernels.json") -> dict:
                    ["symbols_per_s"])
         results[f"packed_vs_unpacked_speedup_L{L}"] = {"x": speedup}
         emit(f"packed_vs_unpacked_L{L}", 0.0, f"{speedup:.2f}x")
+        ratio = (results[f"gf_encode_jnp_packed_seeded_s{S}_K{K}_L{L}"]
+                 ["symbols_per_s"] /
+                 results[f"gf_encode_jnp_packed_s{S}_K{K}_L{L}"]
+                 ["symbols_per_s"])
+        results[f"seeded_vs_materialized_L{L}"] = {"x": ratio}
+        emit(f"seeded_vs_materialized_L{L}", 0.0, f"{ratio:.2f}x")
+    # wire economics: header bytes per packet drop from K·s/8 to 4
+    for Kw in WIRE_KS:
+        mat = packet_wire_bytes(Kw, WIRE_L, S, seeded=False)
+        sed = packet_wire_bytes(Kw, WIRE_L, S, seeded=True)
+        results[f"seeded_wire_overhead_K{Kw}"] = {
+            "K": Kw, "L": WIRE_L, "s": S,
+            "materialized_bytes": mat, "seeded_bytes": sed,
+            "ratio": sed / mat,
+        }
+        emit(f"seeded_wire_overhead_K{Kw}", 0.0,
+             f"{sed}B vs {mat}B ({sed / mat:.4f}x)")
     # small-field sanity row (s=4, the paper's other field size)
     r4 = _bench_one("jnp_packed", 4, 16, 1 << 18)
     results["gf_encode_jnp_packed_s4_K16_L262144"] = r4

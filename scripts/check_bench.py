@@ -11,10 +11,12 @@ machine-readable ``BENCH_*.json`` artifacts the same treatment:
    fields are validated, and every numeric leaf must be finite (a NaN
    in a benchmark means the bench is broken, not slow).
 3. **Bars** — the claims the artifacts exist to witness are enforced:
-   packed ≥ 2x unpacked kernel throughput, fused ≥ 1x per-edge
-   hierarchy wall time, the simulator's measured draw ratio within
-   10% of the Prop. 1 prediction, and the 10^6-client / 100-round
-   simulation under 60 s of CPU wall clock.
+   packed ≥ 2x unpacked kernel throughput, seeded ≥ 0.9x materialized
+   throughput at matched shapes with wire overhead exactly
+   (4+L)/(K+L), fused ≥ 1x per-edge hierarchy wall time, the
+   simulator's measured draw ratio within 10% of the Prop. 1
+   prediction, and the 10^6-client / 100-round simulation under 60 s
+   of CPU wall clock.
 
 The scenario-grid artifacts (``GRID_*.json``, schema
 ``fednc-grid-v1`` from ``repro.grid``) get the same treatment:
@@ -62,21 +64,57 @@ def _require(name: str, entry: dict, key: str, fields: tuple,
     return True
 
 
+#: seeded encode must stay within 10% of its materialized sibling at
+#: matched shapes — regenerating coefficients in-kernel is supposed to
+#: be (at least nearly) free next to the O(K·L) field products
+SEEDED_THROUGHPUT_BAR = 0.9
+#: wire-overhead rows must exist at these generation sizes
+SEEDED_WIRE_KS = (32, 128, 512)
+
+
 def check_kernels(name: str, data: dict) -> list[str]:
     errors: list[str] = []
     enc = {k: v for k, v in data.items() if k.startswith("gf_encode_")}
     spd = {k: v for k, v in data.items()
            if k.startswith("packed_vs_unpacked_speedup_")}
+    sed = {k: v for k, v in data.items()
+           if k.startswith("seeded_vs_materialized_")}
     if not enc:
         errors.append(f"{name}: no gf_encode_* entries")
+    if not any("_seeded_" in k for k in enc):
+        errors.append(f"{name}: no seeded gf_encode_* entries")
     if not spd:
         errors.append(f"{name}: no packed_vs_unpacked_speedup_* entries")
+    if not sed:
+        errors.append(f"{name}: no seeded_vs_materialized_* entries")
     for k, v in enc.items():
         _require(name, v, k, ("us_per_call", "symbols_per_s",
                               "bytes_per_s", "s", "K", "L"), errors)
     for k, v in spd.items():
         if _require(name, v, k, ("x",), errors) and v["x"] < 2.0:
             errors.append(f"{name}: {k} = {v['x']:.2f} < the 2x bar")
+    for k, v in sed.items():
+        if _require(name, v, k, ("x",), errors) \
+                and v["x"] < SEEDED_THROUGHPUT_BAR:
+            errors.append(f"{name}: {k} = {v['x']:.2f} < the "
+                          f"{SEEDED_THROUGHPUT_BAR}x seeded bar")
+    for Kw in SEEDED_WIRE_KS:
+        k = f"seeded_wire_overhead_K{Kw}"
+        v = data.get(k)
+        if v is None:
+            errors.append(f"{name}: missing {k!r}")
+            continue
+        if not _require(name, v, k, ("K", "L", "s", "materialized_bytes",
+                                     "seeded_bytes", "ratio"), errors):
+            continue
+        # the claim the seeded family exists for: header bytes drop
+        # from K·s/8 to 4, so the ratio must equal (4 + L·s/8) over
+        # (K·s/8 + L·s/8) exactly (pure arithmetic, no tolerance)
+        lb = v["L"] * v["s"] / 8
+        expect = (4 + lb) / (v["K"] * v["s"] / 8 + lb)
+        if abs(v["ratio"] - expect) > 1e-12 or v["ratio"] >= 1.0:
+            errors.append(f"{name}: {k} ratio {v['ratio']:.6f} != "
+                          f"(4+L)/(K+L) = {expect:.6f}")
     return errors
 
 
@@ -156,6 +194,9 @@ GRID_AXES = ("strategy", "straggler", "delay_spread", "p_dropout",
 GRID_SIM_STRATEGIES = ("fednc_stream", "fednc_stages", "fedavg")
 GRID_DRAW_FIELDS = ("fednc_draws_mean", "fedavg_draws_mean",
                     "draw_ratio")
+GRID_ENGINE_FIELDS = ("kernel_resolved", "seeded", "decode_rate",
+                      "wire_bytes_per_packet", "wire_bytes_per_round",
+                      "wire_overhead_ratio")
 
 
 def check_grid(name: str, data: dict) -> list[str]:
@@ -194,6 +235,20 @@ def check_grid(name: str, data: dict) -> list[str]:
                     and not ax["p_dropout"] > 0):
                 errors.append(f"{name}: {key} has null draw_ratio "
                               "without dropout")
+        elif ax["strategy"] == "engine":
+            if not _require(name, entry, key, GRID_ENGINE_FIELDS,
+                            errors):
+                continue
+            if entry["seeded"] and entry["wire_overhead_ratio"] >= 1.0:
+                errors.append(
+                    f"{name}: {key} is a seeded cell but its wire "
+                    f"overhead ratio {entry['wire_overhead_ratio']:.4f}"
+                    " did not shrink below 1")
+            if entry["decode_rate"] < 1.0 and not ax["p_dropout"] > 0:
+                errors.append(
+                    f"{name}: {key} dropped rounds "
+                    f"(decode_rate={entry['decode_rate']:.2f}) on a "
+                    "lossless channel")
     if cfg.get("full"):
         errors += _check_grid_full(name, data)
     return errors

@@ -8,8 +8,10 @@ Documentation rots in three ways this script makes impossible:
    bottom, like a fresh REPL session).  A snippet that stops running
    fails the fast tier.
 2. **Stale registry names** — the kernel names documented between the
-   ``<!-- kernels:begin/end -->`` markers in docs/engine.md must equal
-   ``repro.engine.available_kernels()`` exactly.
+   ``<!-- kernels:begin/end -->`` markers in docs/engine.md AND in
+   README.md must equal ``repro.engine.available_kernels()`` exactly;
+   a kernel added to (or renamed in) the registry without touching
+   both documents fails the fast tier.
 3. **Stale numbers** — the packed-vs-unpacked throughput table in
    README.md must be byte-identical to the one this script regenerates
    from BENCH_kernels.json (``python scripts/check_docs.py --table``
@@ -48,16 +50,20 @@ def kernel_table(json_path: pathlib.Path) -> list[str]:
                     and v.get("K") == 10})
     lines = [
         "| L (symbols) | `jnp` Msym/s | `jnp_clmul` Msym/s "
-        "| `jnp_packed` Msym/s | packed / unpacked |",
-        "|---:|---:|---:|---:|---:|",
+        "| `jnp_packed` Msym/s | `jnp_packed_seeded` Msym/s "
+        "| packed / unpacked | seeded / materialized |",
+        "|---:|---:|---:|---:|---:|---:|---:|",
     ]
     for L in lanes:
         cells = [f"{L:,}"]
-        for kern in ("jnp", "jnp_clmul", "jnp_packed"):
+        for kern in ("jnp", "jnp_clmul", "jnp_packed",
+                     "jnp_packed_seeded"):
             r = bench[f"gf_encode_{kern}_s8_K10_L{L}"]
             cells.append(f"{r['symbols_per_s'] / 1e6:.0f}")
         speedup = bench[f"packed_vs_unpacked_speedup_L{L}"]["x"]
         cells.append(f"{speedup:.2f}x")
+        ratio = bench[f"seeded_vs_materialized_L{L}"]["x"]
+        cells.append(f"{ratio:.2f}x")
         lines.append("| " + " | ".join(cells) + " |")
     return lines
 
@@ -111,6 +117,7 @@ def main() -> int:
     # names first: executing docs/engine.md's register_kernel example
     # mutates the live registry for this process
     errors += check_kernel_names(ROOT / "docs" / "engine.md")
+    errors += check_kernel_names(ROOT / "README.md")
     errors += check_bench_table(ROOT / "README.md",
                                 ROOT / "BENCH_kernels.json")
     for rel in DOC_FILES:

@@ -4,13 +4,17 @@ from . import (channel, coupon, dist, fednc, gf, hierarchy, packets,
 from .fednc import FedNCConfig, RoundResult, fedavg_round, fednc_round
 from .gf import ge_solve, get_field, rank
 from .packets import packet_to_pytree, pytree_to_packet
-from .rlnc import EncodedBatch, decode, encode, random_coding_matrix
+from .rlnc import (EncodedBatch, SeededBatch, decode, encode,
+                   encode_seeded, random_coding_matrix,
+                   random_coding_seeds)
+from . import seeds
 
 __all__ = [
     "channel", "coupon", "dist", "fednc", "gf", "hierarchy",
-    "packets", "rlnc",
+    "packets", "rlnc", "seeds",
     "security", "FedNCConfig", "RoundResult", "fedavg_round",
     "fednc_round", "get_field", "ge_solve", "rank",
-    "packet_to_pytree", "pytree_to_packet", "EncodedBatch", "decode",
-    "encode", "random_coding_matrix",
+    "packet_to_pytree", "pytree_to_packet", "EncodedBatch",
+    "SeededBatch", "decode", "encode", "encode_seeded",
+    "random_coding_matrix", "random_coding_seeds",
 ]

@@ -158,9 +158,27 @@ def ge_solve(field: GF, A, C):
 
     Partial pivoting means "pick any row with a non-zero entry" — GF has
     no rounding, so any non-zero pivot is exact.
+
+    Dispatches through a per-field jit cache: called eagerly (the
+    engine's decode planning path), the K-step elimination otherwise
+    costs thousands of op-by-op dispatches — seconds at K=32.
     """
-    A = jnp.asarray(A, jnp.uint8)
-    C = jnp.asarray(C, jnp.uint8)
+    return _ge_solve_fn(field.s)(jnp.asarray(A, jnp.uint8),
+                                 jnp.asarray(C, jnp.uint8))
+
+
+@functools.lru_cache(maxsize=None)
+def _ge_solve_fn(s: int):
+    field = get_field(s)
+
+    @jax.jit
+    def solve(A, C):
+        return _ge_solve_traced(field, A, C)
+
+    return solve
+
+
+def _ge_solve_traced(field: GF, A, C):
     K = A.shape[0]
     M = jnp.concatenate([A, C], axis=1)  # (K, K+L) augmented
     ok = jnp.bool_(True)

@@ -196,6 +196,55 @@ def packets_to_pytrees(P_hat: jnp.ndarray, spec: PacketSpec):
 
 
 # ---------------------------------------------------------------------------
+# wire formats: materialized rows vs seed-addressed packets
+# ---------------------------------------------------------------------------
+#
+# An encoded tuple on the wire is header + payload.  The materialized
+# format ships the K-symbol coding row (K·s/8 bytes); the seeded
+# format (repro.core.seeds) ships a 4-byte uint32 seed from which the
+# receiver regenerates the row — the paper's overhead objection at
+# large K drops from K+L to 4+L bytes per packet.
+
+SEED_WIRE_BYTES = 4
+
+
+def coding_row_wire_bytes(K: int, s: int) -> int:
+    """Bytes a materialized K-symbol GF(2^s) coding row occupies."""
+    return -(-K * s // 8)
+
+
+def packet_wire_bytes(K: int, payload_symbols: int, s: int,
+                      *, seeded: bool) -> int:
+    """Total wire bytes of one encoded tuple (header + payload).
+
+    >>> packet_wire_bytes(128, 4096, 8, seeded=False)   # K + L
+    4224
+    >>> packet_wire_bytes(128, 4096, 8, seeded=True)    # 4 + L
+    4100
+    """
+    header = SEED_WIRE_BYTES if seeded else coding_row_wire_bytes(K, s)
+    return header + -(-payload_symbols * s // 8)
+
+
+def pack_seed_packet(seed, payload: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Serialize one seeded tuple: 4 seed bytes (LE) + payload bytes."""
+    seed_bytes = jax.lax.bitcast_convert_type(
+        jnp.asarray(seed, jnp.uint32).reshape(1), jnp.uint8).reshape(-1)
+    return jnp.concatenate(
+        [seed_bytes, symbols_to_bytes(payload, s)])
+
+
+def unpack_seed_packet(buf: jnp.ndarray, s: int
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`pack_seed_packet`: (seed uint32, payload)."""
+    buf = jnp.asarray(buf, jnp.uint8)
+    seed = jax.lax.bitcast_convert_type(
+        buf[:SEED_WIRE_BYTES].reshape(1, SEED_WIRE_BYTES),
+        jnp.uint32).reshape(())
+    return seed, bytes_to_symbols(buf[SEED_WIRE_BYTES:], s)
+
+
+# ---------------------------------------------------------------------------
 # quantized variant (paper ref [22]: pruning-quantization coding design)
 # ---------------------------------------------------------------------------
 

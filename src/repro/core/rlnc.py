@@ -44,9 +44,76 @@ class EncodedBatch:
         )
 
 
+@dataclass(frozen=True)
+class SeededBatch:
+    """n seed-addressed encoded tuples: 4-byte seeds instead of rows.
+
+    The wire analogue of :class:`EncodedBatch` for the seeded kernel
+    family (`repro.core.seeds`): each tuple carries a uint32 seed from
+    which any party regenerates its K-symbol coding row — 4+L bytes
+    per packet instead of K+L.  ``K`` is carried explicitly because it
+    is no longer readable off the (absent) coding matrix.
+    """
+
+    seeds: jnp.ndarray            # (n,) uint32 row seeds
+    C: jnp.ndarray                # (n, L) uint8 coded payloads
+    K: int                        # generation size (columns of A)
+
+    @property
+    def n(self) -> int:
+        return self.seeds.shape[0]
+
+    def __getitem__(self, idx) -> "SeededBatch":
+        return SeededBatch(seeds=self.seeds[idx], C=self.C[idx],
+                           K=self.K)
+
+    def concat(self, other: "SeededBatch") -> "SeededBatch":
+        if other.K != self.K:
+            raise ValueError("generation sizes differ")
+        return SeededBatch(
+            seeds=jnp.concatenate([self.seeds, other.seeds], 0),
+            C=jnp.concatenate([self.C, other.C], 0), K=self.K)
+
+    def expand(self, s: int) -> EncodedBatch:
+        """Materialize the coding matrix: the bit-exactness bridge.
+
+        ``expand(s).A == seeds.expand_rows(seeds, K, s)`` by
+        construction, so every seeded code path can be checked against
+        the materialized pipeline byte for byte.
+        """
+        from .seeds import expand_rows_jit
+        return EncodedBatch(A=expand_rows_jit(self.seeds, self.K, s),
+                            C=self.C)
+
+
 def random_coding_matrix(key, n: int, K: int, s: int) -> jnp.ndarray:
     """n random coding vectors over GF(2^s) — uniform incl. zero (RLNC)."""
     return get_field(s).random_elements(key, (n, K))
+
+
+def random_coding_seeds(key, n: int) -> jnp.ndarray:
+    """n uint32 row seeds — the seed-addressed RLNC draw.
+
+    Rows of ``seeds.expand_rows(random_coding_seeds(key, n), K, s)``
+    are uniform over GF(2^s)^K, the seeded analogue of
+    :func:`random_coding_matrix`."""
+    from .seeds import draw_seeds
+    return draw_seeds(key, n)
+
+
+def encode_seeded(P: jnp.ndarray, seeds: jnp.ndarray, s: int,
+                  *, impl: str = "auto_seeded") -> SeededBatch:
+    """C = rows(seeds)·P without materializing the coding matrix.
+
+    `impl` must name a seeded registry kernel ('auto_seeded',
+    'jnp_seeded', 'jnp_packed_seeded', 'pallas_packed_seeded').  The
+    returned batch decodes identically to
+    ``encode(P, expand_rows(seeds, K, s), s)``.
+    """
+    from repro.engine.registry import gf_matmul  # late import, avoids cycle
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    C = gf_matmul(seeds, P, s=s, kernel=impl)
+    return SeededBatch(seeds=seeds, C=C, K=int(P.shape[0]))
 
 
 def encode(P: jnp.ndarray, A: jnp.ndarray, s: int,

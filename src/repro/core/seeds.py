@@ -1,0 +1,148 @@
+"""Seed-derived RLNC coding vectors: counter-based PRNG + row expansion.
+
+FedNC's per-packet overhead objection at large generation size K is the
+coding vector itself: every tuple ships a K-symbol GF(2^s) row next to
+its L-symbol payload.  This module replaces the shipped row with a
+**4-byte seed**: coefficient j of a row is a pure function of
+``(seed, j)`` through a counter-based PRNG, so any party holding the
+seed regenerates the row on demand — on the wire a packet is 4+L bytes
+instead of K+L, and the seeded GF kernels (``repro.kernels``,
+``repro.engine.registry``) rebuild their coefficient tile *inside* the
+matmul, so the (N, K) matrix never hits HBM on the encode path.
+
+The PRNG is **Threefry-2x32 (20 rounds)**, implemented here with plain
+uint32 adds/rotates/XORs so the *identical* bitstream is computable
+
+* in pure jnp on CPU (``jnp_seeded`` / ``jnp_packed_seeded``),
+* inside a Pallas TPU kernel body (``pallas_packed_seeded``) — unlike
+  the hardware ``pltpu.prng_random_bits``, which is not reproducible
+  across backends, and
+* by any receiver that wants to materialize the row (decode, tests).
+
+Bit-exactness is the whole contract: same seed ⇒ byte-identical row
+everywhere, property-tested against the Random123 known-answer vectors
+and the materialized kernels in tests/test_seeded.py.
+
+Layout: coefficient j of a row comes from byte ``j % 4`` of the
+Threefry output word with counter ``j // 4`` (key = ``(seed, SALT)``),
+masked to s bits — 4 coefficients per generated word, uniform over
+[0, 2^s) because Threefry words are uniform over uint32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEED_DTYPE = jnp.uint32
+SEED_WIRE_BYTES = 4          # one uint32 seed replaces the K-symbol row
+COEFFS_PER_WORD = 4          # one coefficient byte per Threefry-word byte
+
+# Domain-separation constant ("FdNC"): the second Threefry key word.
+# Fixed forever — changing it silently changes every derived row.
+KEY_SALT = np.uint32(0x46644E43)
+
+_THREEFRY_C240 = np.uint32(0x1BD11BDA)
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+_ROUNDS = 20
+
+
+def _rotl32(x, r: int):
+    """Rotate-left on uint32 lanes (r static, 0 < r < 32)."""
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32-20 block cipher: key (k0, k1), counter (x0, x1).
+
+    All inputs broadcastable uint32 arrays; returns the two output
+    words.  Matches the Random123 reference (and jax.random's core)
+    bit for bit — verified against the published known-answer vectors
+    in tests/test_seeded.py.  Pure adds/rotates/XORs on uint32, so the
+    same function body runs in jnp *and* inside a Pallas kernel.
+    """
+    k0 = jnp.asarray(k0, SEED_DTYPE)
+    k1 = jnp.asarray(k1, SEED_DTYPE)
+    x0 = jnp.asarray(x0, SEED_DTYPE)
+    x1 = jnp.asarray(x1, SEED_DTYPE)
+    ks = (k0, k1, _THREEFRY_C240 ^ k0 ^ k1)
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for d in range(_ROUNDS):                      # static unroll
+        x0 = x0 + x1
+        x1 = _rotl32(x1, _ROTATIONS[d % 8])
+        x1 = x1 ^ x0
+        if d % 4 == 3:
+            j = d // 4 + 1                        # key-injection index
+            x0 = x0 + ks[j % 3]
+            x1 = x1 + ks[(j + 1) % 3] + np.uint32(j)
+    return x0, x1
+
+
+def coeff_words(seeds, n_words: int):
+    """(N,) uint32 seeds -> (N, n_words) uint32 coefficient words.
+
+    Word w of row i is ``threefry2x32(seed_i, SALT; w, 0)[0]`` — a
+    counter-based stream, so any sub-range of words is computable
+    without generating its predecessors.  Uses a 2-D broadcasted iota
+    for the counter (TPU vector units have no 1-D iota).
+    """
+    seeds = jnp.asarray(seeds, SEED_DTYPE)
+    n = seeds.shape[0]
+    ctr = jax.lax.broadcasted_iota(SEED_DTYPE, (n, n_words), 1)
+    w0, _ = threefry2x32(seeds[:, None], KEY_SALT, ctr,
+                         jnp.zeros_like(ctr))
+    return w0
+
+
+def expand_rows(seeds, K: int, s: int = 8) -> jnp.ndarray:
+    """Regenerate the (N, K) uint8 coding matrix from (N,) uint32 seeds.
+
+    Coefficient j = byte ``j % 4`` of word ``j // 4``, masked to s
+    bits — uniform over [0, 2^s).  This is *the* definition of a
+    seed-addressed row; every seeded kernel and the wire format agree
+    with it byte for byte.
+
+    >>> import jax.numpy as jnp
+    >>> A = expand_rows(jnp.array([7, 7, 9], dtype=jnp.uint32), K=5)
+    >>> A.shape, A.dtype
+    ((3, 5), dtype('uint8'))
+    >>> bool((A[0] == A[1]).all())        # same seed, same row
+    True
+    >>> bool((A[0] == A[2]).all())        # different seed
+    False
+    """
+    seeds = jnp.asarray(seeds, SEED_DTYPE)
+    if seeds.ndim != 1:
+        raise ValueError(f"seeds must be (N,), got {seeds.shape}")
+    n_words = -(-K // COEFFS_PER_WORD)
+    W = coeff_words(seeds, n_words)                   # (N, n_words)
+    shifts = (jnp.arange(COEFFS_PER_WORD, dtype=SEED_DTYPE)
+              * np.uint32(8))
+    b = (W[:, :, None] >> shifts[None, None, :]) & np.uint32(0xFF)
+    flat = b.reshape(seeds.shape[0], n_words * COEFFS_PER_WORD)
+    mask = np.uint8((1 << s) - 1)
+    return flat[:, :K].astype(jnp.uint8) & mask
+
+
+@functools.partial(jax.jit, static_argnames=("K", "s"))
+def _expand_rows_jit(seeds, *, K: int, s: int):
+    return expand_rows(seeds, K, s)
+
+
+def expand_rows_jit(seeds, K: int, s: int = 8) -> jnp.ndarray:
+    """Jitted :func:`expand_rows` (host-side callers; kernels inline)."""
+    return _expand_rows_jit(jnp.asarray(seeds, SEED_DTYPE), K=K, s=s)
+
+
+def draw_seeds(key, n: int) -> jnp.ndarray:
+    """Draw n uniform uint32 row seeds from a jax PRNG key.
+
+    The seeded analogue of ``rlnc.random_coding_matrix`` — rows of
+    ``expand_rows(draw_seeds(key, n), K, s)`` are uniform over
+    GF(2^s)^K (up to the 2^32-seed family size; at FedNC scales the
+    collision probability is the birthday bound n^2/2^33).
+    """
+    return jax.random.bits(key, (n,), SEED_DTYPE)

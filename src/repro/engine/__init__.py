@@ -17,14 +17,17 @@ See docs/engine.md and docs/simulator.md for the architecture guides.
 """
 from .engine import (DEFAULT_CHUNK_L, CodingEngine, EngineConfig,
                      EngineRound, get_engine)
-from .registry import (available_kernels, gf_matmul, register_kernel,
-                       resolve_kernel, resolve_kernel_name)
+from .registry import (available_kernels, gf_matmul, is_seeded_kernel,
+                       materialized_kernel_name, register_kernel,
+                       resolve_kernel, resolve_kernel_name,
+                       seeded_kernel_name)
 from .select import incremental_select
 from .stream import StreamDecoder, stream_decode
 
 __all__ = [
     "CodingEngine", "DEFAULT_CHUNK_L", "EngineConfig", "EngineRound",
     "get_engine", "available_kernels", "gf_matmul", "register_kernel",
-    "resolve_kernel", "resolve_kernel_name", "incremental_select",
-    "StreamDecoder", "stream_decode",
+    "resolve_kernel", "resolve_kernel_name", "is_seeded_kernel",
+    "seeded_kernel_name", "materialized_kernel_name",
+    "incremental_select", "StreamDecoder", "stream_decode",
 ]

@@ -45,13 +45,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packets as pkt
+from repro.core import seeds as seedlib
 from repro.core.channel import ChannelReport, RowGather, RowMix
 from repro.core.gf import get_field, invert
-from repro.core.rlnc import EncodedBatch
+from repro.core.rlnc import EncodedBatch, SeededBatch
 
 from .defaults import DEFAULT_CHUNK_L
-from .registry import resolve_kernel
+from .registry import (is_seeded_kernel, materialized_kernel_name,
+                       resolve_kernel, seeded_kernel_name)
 from .select import incremental_select
+
+
+def _is_seed_rows(A) -> bool:
+    """True iff the row operand is a (n,) uint32 seed vector.
+
+    The two wire formats are structurally disjoint — materialized rows
+    are a 2-D uint8 matrix, seed vectors are 1-D uint32 — so dispatch
+    is unambiguous."""
+    arr = jnp.asarray(A)
+    return arr.ndim == 1 and arr.dtype == jnp.uint32
 
 
 @dataclass(frozen=True)
@@ -84,8 +96,23 @@ class CodingEngine:
         self.config = config
         self.mesh = mesh
         self.kernel_name, self._kernel = resolve_kernel(config.kernel)
+        # A seeded kernel only covers the *encode* side (rows derived
+        # from seeds); decode/recode mix with arbitrary materialized
+        # matrices (A^-1, R), which run through the kernel's
+        # materialized sibling.  Both siblings are always resolved so
+        # any engine can consume either packet format; `self.seeded`
+        # governs which format round()/encode() *produce*.
+        self.seeded = is_seeded_kernel(self.kernel_name)
+        if self.seeded:
+            self._seed_kernel = self._kernel
+            _, self._mat_kernel = resolve_kernel(
+                materialized_kernel_name(self.kernel_name))
+        else:
+            _, self._seed_kernel = resolve_kernel(
+                seeded_kernel_name(self.kernel_name))
+            self._mat_kernel = self._kernel
         self.field = get_field(config.s)
-        self._dispatch: Optional[tuple] = None   # built lazily, once
+        self._dispatch: dict[bool, tuple] = {}   # built lazily, once
         # L-sized kernel dispatches issued so far (monotonic; benchmarks
         # diff it around a round to count dispatches per round)
         self.dispatch_count = 0
@@ -113,33 +140,59 @@ class CodingEngine:
                                              density=cfg.coding_density)
         return rlnc.random_coding_matrix(key, n, K, cfg.s)
 
+    def coding_seeds(self, key, n: int) -> jnp.ndarray:
+        """n uint32 row seeds — the seed-addressed coding "matrix".
+
+        Only the plain uniform RLNC draw has a seeded representation;
+        systematic / sparse rows cannot be derived from a 4-byte seed.
+        """
+        cfg = self.config
+        if cfg.systematic or cfg.coding_density < 1.0:
+            raise ValueError(
+                "seeded coding vectors require plain uniform RLNC "
+                "(systematic=False, coding_density=1.0)")
+        return seedlib.draw_seeds(key, n)
+
+    def expand_seeds(self, seeds, K: int) -> jnp.ndarray:
+        """Materialize the (n, K) rows a seed vector addresses.
+
+        The decode/oracle-side bridge: row-space work (selection,
+        inversion, recoding) happens on this tiny matrix while the
+        L-sized payload products stay seed-addressed."""
+        return seedlib.expand_rows_jit(seeds, K, self.config.s)
+
     # -- chunked / sharded executor ---------------------------------------
 
-    def _mesh_kernel(self):
+    def _mesh_kernel(self, seeded: bool = False):
         """The registry kernel, shard_map-wrapped over the lane axis.
 
-        Built (and jitted) once per engine, so repeat chunks dispatch
-        from the compile cache instead of re-tracing the shard_map."""
-        if self._dispatch is not None:
-            return self._dispatch
+        Built (and jitted) once per engine (separately for the seeded
+        encode kernel and the materialized mixing kernel), so repeat
+        chunks dispatch from the compile cache instead of re-tracing
+        the shard_map."""
+        if seeded in self._dispatch:
+            return self._dispatch[seeded]
+        kern = self._seed_kernel if seeded else self._mat_kernel
         mesh, axis = self.mesh, self.config.lane_axis
         if mesh is None or axis is None or axis not in mesh.axis_names \
                 or mesh.shape[axis] == 1:
-            self._dispatch = (self._kernel, 1)
-            return self._dispatch
+            self._dispatch[seeded] = (kern, 1)
+            return self._dispatch[seeded]
         from jax.experimental.shard_map import shard_map
         from repro.launch.sharding import coded_spec, replicated_spec
         size = int(mesh.shape[axis])
-        kern = self._kernel
         s = self.config.s
+        # the row operand replicates either way: a tiny (n, K) matrix,
+        # or the even tinier (n,) seed vector
+        row_spec = replicated_spec(1 if seeded else 2)
         sharded = jax.jit(shard_map(
             lambda a, p: kern(a, p, s=s), mesh=mesh,
-            in_specs=(replicated_spec(2), coded_spec(2, mesh, axis=axis)),
+            in_specs=(row_spec, coded_spec(2, mesh, axis=axis)),
             out_specs=coded_spec(2, mesh, axis=axis),
             check_rep=False,
         ))
-        self._dispatch = (sharded, size)
-        return self._dispatch
+        self._dispatch[seeded] = (sharded, size)
+        return self._dispatch[seeded]
 
     def _chunks(self, L: int) -> tuple[int, int]:
         """(chunk width, count) covering L after padding."""
@@ -152,11 +205,13 @@ class CodingEngine:
         """C = A·P, chunk-streamed through the configured kernel.
 
         Chunks are dispatched eagerly (JAX async dispatch), so chunk
-        i+1 is enqueued while chunk i still executes on-device.
+        i+1 is enqueued while chunk i still executes on-device.  On a
+        seeded engine, pass the (n,) uint32 seed vector as `A` to run
+        the seeded encode kernel (rows regenerated in-kernel).
         """
-        return self._stream(A, P)
+        return self._stream(A, P, enc_seeded=_is_seed_rows(A))
 
-    def _stream(self, A, P, A_post=None):
+    def _stream(self, A, P, A_post=None, *, enc_seeded: bool = False):
         """Run the kernel chunk-by-chunk over the lane dim of P.
 
         With `A_post` (the decode mixing matrix), each chunk is pushed
@@ -164,40 +219,56 @@ class CodingEngine:
         C_i = A·P_i then A_post·C_i.  No cross-chunk dependency exists,
         so the decode of chunk i overlaps the encode of chunk i+1 via
         async dispatch.  Returns A·P, or A_post·A·P when given.
+
+        With ``enc_seeded`` the first operand is the (n,) uint32 seed
+        vector and the encode matmul runs through the seeded kernel —
+        coefficient rows are regenerated inside the kernel per chunk,
+        so the coding matrix never rides along with the payload.  The
+        `A_post` mixing (decode) product always uses the materialized
+        kernel.
         """
-        kernel, shards = self._mesh_kernel()
+        enc_kernel, shards = self._mesh_kernel(enc_seeded)
+        post_kernel, _ = self._mesh_kernel(False)
         s = self.config.s
-        n_out = (A_post if A_post is not None else A).shape[0]
+        if A_post is not None:
+            n_out = A_post.shape[0]
+        else:
+            n_out = A.shape[0]
         L = P.shape[1]
         if L == 0:
             return jnp.zeros((n_out, 0), jnp.uint8)
 
-        def mm(M, X):
+        def mm(kernel, M, X):
             self.dispatch_count += 1
             return kernel(M, X, s=s) if shards == 1 else kernel(M, X)
 
         cl, nc = self._chunks(L)
         cl += (-cl) % shards            # lane-shardable chunk width
         if nc == 1 and cl == L:
-            out = mm(A, P)
-            return mm(A_post, out) if A_post is not None else out
+            out = mm(enc_kernel, A, P)
+            return mm(post_kernel, A_post, out) \
+                if A_post is not None else out
         Lp = cl * nc
         Pp = jnp.pad(P, ((0, 0), (0, Lp - L))) if Lp != L else P
         outs = []
         for c in range(nc):
             block = jax.lax.dynamic_slice_in_dim(Pp, c * cl, cl, axis=1)
-            enc = mm(A, block)
-            outs.append(mm(A_post, enc) if A_post is not None else enc)
+            enc = mm(enc_kernel, A, block)
+            outs.append(mm(post_kernel, A_post, enc)
+                        if A_post is not None else enc)
         return jnp.concatenate(outs, axis=1)[:, :L]
 
     # -- pipeline stages --------------------------------------------------
 
-    def encode(self, P: jnp.ndarray, A: jnp.ndarray) -> EncodedBatch:
+    def encode(self, P: jnp.ndarray, A: jnp.ndarray):
         """C = A·P as an EncodedBatch (chunk-streamed).
 
         P is the (K, L) packet matrix (K clients, L symbols each), A an
         (n, K) coding matrix over GF(2^s) — usually from
-        :meth:`coding_matrix`.
+        :meth:`coding_matrix`.  Passing a (n,) uint32 seed vector (from
+        :meth:`coding_seeds`) instead runs the seeded kernel and
+        returns a :class:`SeededBatch` — 4-byte headers on the wire,
+        rows regenerated in-kernel.
 
         >>> import jax, jax.numpy as jnp
         >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
@@ -207,10 +278,32 @@ class CodingEngine:
         >>> batch.A.shape, batch.C.shape
         ((3, 3), (3, 4))
         """
+        if _is_seed_rows(A):
+            return self.encode_seeded(P, A)
         return EncodedBatch(A=jnp.asarray(A, jnp.uint8),
                             C=self.matmul(A, P))
 
-    def recode(self, batch: EncodedBatch, key, n_out: int) -> EncodedBatch:
+    def encode_seeded(self, P: jnp.ndarray, seeds: jnp.ndarray
+                      ) -> SeededBatch:
+        """C = rows(seeds)·P without materializing the coding matrix.
+
+        Bit-exact vs. ``encode(P, expand_seeds(seeds, K)).C`` — same
+        Threefry stream, evaluated inside the kernel per chunk.
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> seeds = eng.coding_seeds(jax.random.PRNGKey(0), n=3)
+        >>> sb = eng.encode_seeded(P, seeds)
+        >>> mat = eng.encode(P, eng.expand_seeds(seeds, 3))
+        >>> (sb.C == mat.C).all().item()
+        True
+        """
+        seeds = jnp.asarray(seeds, jnp.uint32)
+        C = self._stream(seeds, P, enc_seeded=True)
+        return SeededBatch(seeds=seeds, C=C, K=int(P.shape[0]))
+
+    def recode(self, batch, key, n_out: int) -> EncodedBatch:
         """Relay recoding (paper Prop. 2): emit `n_out` fresh random
         combinations of the received tuples without decoding.
 
@@ -218,7 +311,12 @@ class CodingEngine:
         (R·A, R·C); coding vectors compose linearly, so downstream
         decoders treat the result exactly like first-hop tuples.  Both
         products run through the registry kernel, chunk-streamed
-        (`recode_with` for a caller-supplied R).
+        (`recode_with` for a caller-supplied R).  A :class:`SeededBatch`
+        input is accepted — seed-expansion of the tiny (n, K) rows
+        happens at the relay, and the output rows are *materialized*:
+        a composed row R·A is not derivable from any 4-byte seed, so
+        Prop. 2 semantics survive while only first-hop traffic enjoys
+        the seeded header.
 
         >>> import jax, jax.numpy as jnp
         >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
@@ -234,25 +332,26 @@ class CodingEngine:
         R = self.field.random_elements(key, (n_out, batch.n))
         return self.recode_with(R, batch)
 
-    def recode_with(self, R: jnp.ndarray, batch: EncodedBatch
-                    ) -> EncodedBatch:
+    def recode_with(self, R: jnp.ndarray, batch) -> EncodedBatch:
         """Recode with an explicit mixing matrix: (R·A, R·C).
 
         η sequential hops compose by linearity — recoding with
         R_η···R_1 (one call) is bit-identical to η calls in sequence;
         `core.channel.MultiHopChannel` relies on exactly that."""
         R = jnp.asarray(R, jnp.uint8)
+        if isinstance(batch, SeededBatch):
+            batch = batch.expand(self.config.s)
         return EncodedBatch(A=self.matmul(R, batch.A),
                             C=self.matmul(R, batch.C))
 
-    def select(self, batch: EncodedBatch
-               ) -> tuple[jnp.ndarray, EncodedBatch]:
+    def select(self, batch) -> tuple[jnp.ndarray, EncodedBatch]:
         """Pick K independent tuples out of n >= K, fully on-device."""
+        if isinstance(batch, SeededBatch):
+            batch = batch.expand(self.config.s)
         ok, idx, _ = incremental_select(batch.A, self.config.s)
         return ok, EncodedBatch(A=batch.A[idx], C=batch.C[idx])
 
-    def decode(self, batch: EncodedBatch
-               ) -> tuple[bool, Optional[jnp.ndarray]]:
+    def decode(self, batch) -> tuple[bool, Optional[jnp.ndarray]]:
         """(ok, P_hat): select (if n > K), invert A, stream A^-1·C.
 
         GF arithmetic is exact, so inverting the (tiny) K x K coding
@@ -266,7 +365,12 @@ class CodingEngine:
         >>> ok, P_hat = eng.decode(batch[jnp.array([0, 2, 4])])  # 2 erased
         >>> bool(ok) and (P_hat == P).all().item()
         True
-        """
+
+        A :class:`SeededBatch` is accepted directly: the receiver
+        regenerates the tiny (n, K) coding matrix from the 4-byte
+        headers (the L-sized payload never carried the rows)."""
+        if isinstance(batch, SeededBatch):
+            batch = batch.expand(self.config.s)
         K = batch.K
         if batch.n < K:
             return False, None
@@ -280,10 +384,15 @@ class CodingEngine:
 
     # -- fused round internals --------------------------------------------
 
-    def _fused_ideal_round(self, P: jnp.ndarray, A: jnp.ndarray
+    def _fused_ideal_round(self, P: jnp.ndarray, A: jnp.ndarray,
+                           seeds: Optional[jnp.ndarray] = None
                            ) -> EngineRound:
         """Lossless-delivery tail: resolve invertibility on the tiny
-        (n, K) problem, then stream A_inv·(A_sel·P) in one dispatch."""
+        (n, K) problem, then stream A_inv·(A_sel·P) in one dispatch.
+
+        When `seeds` is given, A is its expansion; row-space planning
+        (selection, inversion) runs on A while the L-sized encode
+        product runs the seeded kernel on the matching seed subset."""
         n, K = A.shape
         if n < K:
             return EngineRound(False, None, None)
@@ -291,19 +400,24 @@ class CodingEngine:
         if n > K:
             ok, idx, _ = incremental_select(A, self.config.s)
             A_sel = A[idx]
+            enc = seeds[idx] if seeds is not None else A_sel
         else:
             A_sel = A
+            enc = seeds if seeds is not None else A
         ok_inv, A_inv = invert(self.field, A_sel)
         if not bool(ok & ok_inv):
             return EngineRound(False, None, None)
         # encode only the selected rows — the ideal channel delivers
         # everything, so unselected erasure-headroom rows are dead work
         # and A_inv·(A_sel·P) is the exact decode.
-        P_hat = self._stream(A_sel, P, A_post=A_inv)
+        P_hat = self._stream(enc, P, A_post=A_inv,
+                             enc_seeded=seeds is not None)
         return EngineRound(True, P_hat, None)
 
     def _fused_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
-                             channel) -> EngineRound:
+                             channel,
+                             seeds: Optional[jnp.ndarray] = None
+                             ) -> EngineRound:
         """encode -> channel -> select -> decode as ONE streamed dispatch.
 
         The channel's `plan_transform` yields its whole action on the
@@ -339,9 +453,17 @@ class CodingEngine:
         _, A_inv = invert(self.field, A_rx[sel])   # sel rows independent
         if isinstance(plan, RowGather):
             A_enc, A_post = A[idx[sel]], A_inv
+            if seeds is not None:
+                A_enc = seeds[idx[sel]]
         else:
+            # RowMix touches every source row, so the full seed vector
+            # feeds the encode; the relay composition R folds into the
+            # materialized A_post (composed rows have no seed).
             A_enc, A_post = A, self.field.matmul(A_inv, plan.R[sel])
-        P_hat = self._stream(A_enc, P, A_post=A_post)
+            if seeds is not None:
+                A_enc = seeds
+        P_hat = self._stream(A_enc, P, A_post=A_post,
+                             enc_seeded=seeds is not None)
         return EngineRound(True, P_hat, report)
 
     def _stagewise_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
@@ -355,13 +477,18 @@ class CodingEngine:
         ok, P_hat = self.decode(batch)
         return EngineRound(bool(ok), P_hat, report)
 
-    def _run_round(self, P: jnp.ndarray, A: jnp.ndarray,
-                   channel) -> EngineRound:
-        """Shared channel-dispatch tail of `round`/`multi_edge_round`."""
+    def _run_round(self, P: jnp.ndarray, A: jnp.ndarray, channel,
+                   seeds: Optional[jnp.ndarray] = None) -> EngineRound:
+        """Shared channel-dispatch tail of `round`/`multi_edge_round`.
+
+        `seeds`, when given, is the seed vector whose expansion is `A`;
+        the fused paths then run their encode leg through the seeded
+        kernel.  The stage-wise fallback materializes (it already has
+        A), which is bit-identical by construction."""
         if channel is None:
-            return self._fused_ideal_round(P, A)
+            return self._fused_ideal_round(P, A, seeds)
         if hasattr(channel, "plan_transform"):
-            return self._fused_channel_round(P, A, channel)
+            return self._fused_channel_round(P, A, channel, seeds)
         return self._stagewise_channel_round(P, A, channel)
 
     # -- the full round ---------------------------------------------------
@@ -386,6 +513,13 @@ class CodingEngine:
         """
         K, L = P.shape
         n = K + self.config.extra_tuples
+        if self.seeded:
+            # seeded engine: draw 4-byte row seeds; the tiny expansion
+            # drives row-space planning while the L-sized encode stays
+            # seed-addressed inside the kernel.
+            seeds = self.coding_seeds(key, n)
+            return self._run_round(P, self.expand_seeds(seeds, K),
+                                   channel, seeds=seeds)
         A = self.coding_matrix(key, n, K)
         return self._run_round(P, A, channel)
 

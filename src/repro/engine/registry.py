@@ -5,7 +5,13 @@ The seed scattered backend choice across three stringly-typed sites
 `FedNCConfig.kernel_impl`).  All of them now resolve here.
 
 A *kernel* is a callable ``fn(A, P, *, s) -> C`` computing C = A·P over
-GF(2^s) for A (n, K) uint8 and P (K, L) uint8.  Built-in entries:
+GF(2^s) for A (n, K) uint8 and P (K, L) uint8.  The **seeded** family
+takes ``(seeds, P)`` instead — seeds (n,) uint32 — and regenerates row
+i of the coding matrix from seed i with the counter-based Threefry
+stream (`repro.core.seeds.expand_rows`), bit-identical to running the
+materialized sibling on the expanded matrix.  Built-in entries (this
+table is the source of truth; `scripts/check_docs.py` fails the fast
+tier if the documented lists drift from ``available_kernels()``):
 
 ======================  ====================================================
 ``jnp``                 table-based jnp oracle (independent formulation —
@@ -16,13 +22,21 @@ GF(2^s) for A (n, K) uint8 and P (K, L) uint8.  Built-in entries:
                         path (4 symbols per vector lane)
 ``pallas``              unpacked Pallas TPU kernel (interpret on CPU)
 ``pallas_packed``       lane-packed Pallas TPU kernel (interpret on CPU)
+``jnp_seeded``          seeded table oracle: expand rows, then ``jnp``
+``jnp_packed_seeded``   seeded lane-packed ladder, coefficients generated
+                        in the k loop (no (n, K) uint8 operand)
+``pallas_packed_seeded``  lane-packed Pallas kernel generating its
+                        coefficient tile in-register from the seeds ref
 ``auto``                alias: ``pallas_packed`` on TPU, ``jnp_packed``
                         elsewhere
+``auto_seeded``         alias: ``pallas_packed_seeded`` on TPU,
+                        ``jnp_packed_seeded`` elsewhere
 ======================  ====================================================
 
 Downstream projects register custom backends with
 :func:`register_kernel` (e.g. a GPU clmul kernel) and select them by
-name through :class:`repro.engine.EngineConfig`.
+name through :class:`repro.engine.EngineConfig`; pass ``seeded=True``
+for backends with the seeds-first signature.
 """
 from __future__ import annotations
 
@@ -34,22 +48,32 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.gf2_xor import gf2_matmul_pallas
-from repro.kernels.gf_matmul import gf_matmul_pallas, gf_matmul_pallas_packed
+from repro.kernels.gf_matmul import (gf_matmul_pallas,
+                                     gf_matmul_pallas_packed,
+                                     gf_matmul_pallas_packed_seeded)
 
 KernelFn = Callable[..., jnp.ndarray]
 
+SEEDED_SUFFIX = "_seeded"
+_ALIASES = ("auto", "auto_seeded")
+
 _KERNELS: Dict[str, KernelFn] = {}
+_SEEDED: set[str] = set()
 
 
 def register_kernel(name: str, fn: KernelFn, *,
+                    seeded: bool = False,
                     overwrite: bool = False) -> KernelFn:
     """Register a coded-matmul backend under `name`.
 
     `fn(A, P, *, s)` must return A·P over GF(2^s) as (n, L) uint8,
-    bit-exact against the `jnp` table oracle.  Registration is
-    process-global; see docs/engine.md for a worked custom-backend
-    example (kept out of this doctest so doctest runs never mutate the
-    live registry).
+    bit-exact against the `jnp` table oracle.  With ``seeded=True``
+    the first operand is (n,) uint32 row seeds instead of A, and the
+    result must be bit-exact against the `jnp_seeded` oracle (i.e.
+    the materialized product of ``repro.core.seeds.expand_rows``).
+    Registration is process-global; see docs/engine.md for a worked
+    custom-backend example (kept out of this doctest so doctest runs
+    never mutate the live registry).
 
     >>> "jnp_packed" in available_kernels()   # built-ins pre-registered
     True
@@ -58,16 +82,65 @@ def register_kernel(name: str, fn: KernelFn, *,
         ...
     ValueError: 'auto' is a reserved alias
     """
-    if name == "auto":
-        raise ValueError("'auto' is a reserved alias")
+    if name in _ALIASES:
+        raise ValueError(f"{name!r} is a reserved alias")
     if name in _KERNELS and not overwrite:
         raise ValueError(f"kernel {name!r} already registered")
     _KERNELS[name] = fn
+    if seeded:
+        _SEEDED.add(name)
+    else:
+        _SEEDED.discard(name)
     return fn
 
 
 def available_kernels() -> tuple[str, ...]:
-    return tuple(sorted(_KERNELS)) + ("auto",)
+    return tuple(sorted(_KERNELS)) + _ALIASES
+
+
+def is_seeded_kernel(name: str) -> bool:
+    """True iff `name` (or its 'auto' resolution) takes row seeds."""
+    return resolve_kernel_name(name) in _SEEDED
+
+
+def seeded_kernel_name(name: str) -> str:
+    """The seeded sibling of a materialized kernel name.
+
+    >>> seeded_kernel_name("jnp_packed")
+    'jnp_packed_seeded'
+    >>> seeded_kernel_name("auto")
+    'auto_seeded'
+    """
+    if name == "auto":
+        return "auto_seeded"
+    resolved = resolve_kernel_name(name)
+    if resolved in _SEEDED:
+        return resolved
+    candidate = resolved + SEEDED_SUFFIX
+    if candidate not in _SEEDED:
+        # fall back to the family oracle pairing: every materialized
+        # kernel's rows expand identically, so jnp_seeded is always a
+        # correct (if unfused) sibling
+        candidate = "jnp_seeded"
+    return candidate
+
+
+def materialized_kernel_name(name: str) -> str:
+    """The materialized sibling of a seeded kernel name.
+
+    >>> materialized_kernel_name("pallas_packed_seeded")
+    'pallas_packed'
+    >>> materialized_kernel_name("jnp")     # already materialized
+    'jnp'
+    """
+    if name == "auto_seeded":
+        return "auto"
+    resolved = resolve_kernel_name(name)
+    if resolved not in _SEEDED:
+        return resolved
+    base = resolved[: -len(SEEDED_SUFFIX)] \
+        if resolved.endswith(SEEDED_SUFFIX) else resolved
+    return base if base in _KERNELS else "jnp"
 
 
 def _on_tpu() -> bool:
@@ -75,9 +148,11 @@ def _on_tpu() -> bool:
 
 
 def resolve_kernel_name(name: str) -> str:
-    """Resolve the 'auto' alias against the current backend."""
+    """Resolve the 'auto'/'auto_seeded' aliases for the current backend."""
     if name == "auto":
         return "pallas_packed" if _on_tpu() else "jnp_packed"
+    if name == "auto_seeded":
+        return "pallas_packed_seeded" if _on_tpu() else "jnp_packed_seeded"
     return name
 
 
@@ -94,6 +169,8 @@ def resolve_kernel(name: str) -> tuple[str, KernelFn]:
 
 def gf_matmul(A, P, *, s: int = 8, kernel: str = "auto") -> jnp.ndarray:
     """Convenience: one-shot registry-dispatched C = A·P.
+
+    For a seeded kernel name, `A` is the (n,) uint32 seed vector.
 
     >>> import jax.numpy as jnp
     >>> A = jnp.array([[1, 2]], dtype=jnp.uint8)
@@ -139,8 +216,28 @@ def _pallas_packed_kernel(A, P, *, s: int):
     return gf_matmul_pallas_packed(A, P, s=s, interpret=not _on_tpu())
 
 
+@functools.partial(jax.jit, static_argnames=("s",))
+def _jnp_seeded_kernel(seeds, P, *, s: int):
+    return ref.gf_matmul_seeded_ref(seeds, P, s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _jnp_packed_seeded_kernel(seeds, P, *, s: int):
+    return ref.gf_matmul_packed_seeded_ref(seeds, P, s)
+
+
+def _pallas_packed_seeded_kernel(seeds, P, *, s: int):
+    return gf_matmul_pallas_packed_seeded(seeds, P, s=s,
+                                          interpret=not _on_tpu())
+
+
 register_kernel("jnp", _jnp_kernel)
 register_kernel("jnp_clmul", _jnp_clmul_kernel)
 register_kernel("jnp_packed", _jnp_packed_kernel)
 register_kernel("pallas", _pallas_kernel)
 register_kernel("pallas_packed", _pallas_packed_kernel)
+register_kernel("jnp_seeded", _jnp_seeded_kernel, seeded=True)
+register_kernel("jnp_packed_seeded", _jnp_packed_seeded_kernel,
+                seeded=True)
+register_kernel("pallas_packed_seeded", _pallas_packed_seeded_kernel,
+                seeded=True)

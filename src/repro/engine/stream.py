@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gf import get_field
-from repro.core.rlnc import EncodedBatch
+from repro.core.rlnc import EncodedBatch, SeededBatch
+from repro.core.seeds import expand_rows
 
 from .select import reduce_insert
 
@@ -71,6 +72,34 @@ def _ingest_fn(s: int):
 
         (B, Y, filled), ranks = jax.lax.scan(
             body, (B, Y, filled), (A_rows, C_rows))
+        return B, Y, filled, ranks
+
+    return ingest
+
+
+@functools.lru_cache(maxsize=None)
+def _ingest_seeded_fn(s: int, K: int):
+    """Seed-addressed ingest: rows regenerated inside the scan body.
+
+    Only 4 bytes of coding metadata per arrival ever cross into the
+    dispatch — the K-symbol row exists transiently in-register per
+    scan step.  `col_mask` zeroes coefficients of absent sources (the
+    simulator's dropout columns) before reduction, matching the
+    materialized path's ``rows[:, ~live] = 0``."""
+    field = get_field(s)
+
+    @jax.jit
+    def ingest(B, Y, filled, seeds, C_rows, col_mask):
+        def body(carry, sc):
+            B, Y, filled = carry
+            seed, c = sc
+            a = expand_rows(seed[None], K, s)[0]
+            a = jnp.where(col_mask, a, jnp.uint8(0))
+            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
+            return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
+
+        (B, Y, filled), ranks = jax.lax.scan(
+            body, (B, Y, filled), (seeds, C_rows))
         return B, Y, filled, ranks
 
     return ingest
@@ -131,11 +160,17 @@ class StreamDecoder:
     def push(self, a, c=None) -> int:
         """Consume one arrival (coding vector `a`, payload `c`).
 
-        Returns the rank after the arrival.  Pushes after COMPLETE are
-        counted but ignored (the server has already decoded)."""
+        `a` may be a scalar uint32 *seed* instead of a (K,) row — the
+        seed-addressed wire format — in which case the row is
+        regenerated here (`repro.core.seeds`).  Returns the rank after
+        the arrival.  Pushes after COMPLETE are counted but ignored
+        (the server has already decoded)."""
         self.arrivals += 1
         if self.complete:
             return self.K
+        a = jnp.asarray(a)
+        if a.dtype == jnp.uint32 and a.ndim == 0:
+            a = expand_rows(a[None], self.K, self.s)[0]
         self._B, self._Y, self._filled, _ = _push_fn(self.s)(
             self._B, self._Y, self._filled,
             jnp.asarray(a, jnp.uint8), self._payload(c))
@@ -144,11 +179,24 @@ class StreamDecoder:
             self.decoded_at = self.arrivals
         return r
 
+    def _record_block(self, g: int, prior: int, already: bool,
+                      ranks) -> np.ndarray:
+        self.arrivals += g
+        ranks = np.asarray(ranks)
+        if not already and ranks.size and ranks[-1] == self.K:
+            self.decoded_at = prior + int(np.argmax(ranks == self.K)) + 1
+        return ranks
+
     def ingest(self, A_rows, C_rows=None) -> np.ndarray:
         """Consume a block of arrivals as one scan dispatch.
 
-        Returns the (g,) rank-after-each-arrival trajectory; updates
-        ``decoded_at`` with the first arrival index reaching K."""
+        A 1-D uint32 `A_rows` is treated as a block of row *seeds*
+        (see :meth:`ingest_seeded`).  Returns the (g,) rank-after-
+        each-arrival trajectory; updates ``decoded_at`` with the first
+        arrival index reaching K."""
+        A_rows = jnp.asarray(A_rows)
+        if A_rows.ndim == 1 and A_rows.dtype == jnp.uint32:
+            return self.ingest_seeded(A_rows, C_rows)
         A_rows = jnp.asarray(A_rows, jnp.uint8)
         g = A_rows.shape[0]
         if C_rows is None:
@@ -158,11 +206,30 @@ class StreamDecoder:
         self._B, self._Y, self._filled, ranks = _ingest_fn(self.s)(
             self._B, self._Y, self._filled, A_rows,
             jnp.asarray(C_rows, jnp.uint8))
-        self.arrivals += g
-        ranks = np.asarray(ranks)
-        if not already and ranks.size and ranks[-1] == self.K:
-            self.decoded_at = prior + int(np.argmax(ranks == self.K)) + 1
-        return ranks
+        return self._record_block(g, prior, already, ranks)
+
+    def ingest_seeded(self, seeds, C_rows=None,
+                      col_mask=None) -> np.ndarray:
+        """Consume a block of seed-addressed arrivals (one dispatch).
+
+        `seeds` is (g,) uint32; each row is regenerated *inside* the
+        jitted scan, so per-arrival coding metadata is 4 bytes instead
+        of K symbols.  `col_mask` (K,) bool zeroes the coefficients of
+        absent sources before reduction — the simulator's dropout
+        semantics, bit-identical to masking the materialized rows."""
+        seeds = jnp.asarray(seeds, jnp.uint32)
+        g = seeds.shape[0]
+        if C_rows is None:
+            C_rows = jnp.zeros((g, self.L), jnp.uint8)
+        mask = (jnp.ones((self.K,), jnp.bool_) if col_mask is None
+                else jnp.asarray(col_mask, jnp.bool_))
+        prior = self.arrivals
+        already = self.complete
+        self._B, self._Y, self._filled, ranks = _ingest_seeded_fn(
+            self.s, self.K)(
+            self._B, self._Y, self._filled, seeds,
+            jnp.asarray(C_rows, jnp.uint8), mask)
+        return self._record_block(g, prior, already, ranks)
 
     # -- the result -------------------------------------------------------
 
@@ -178,9 +245,9 @@ class StreamDecoder:
         return self._B
 
 
-def stream_decode(batch: EncodedBatch, s: int, order=None
+def stream_decode(batch, s: int, order=None
                   ) -> tuple[bool, Optional[jnp.ndarray], int]:
-    """Decode an EncodedBatch by feeding its rows in arrival order.
+    """Decode an EncodedBatch (or SeededBatch) row-by-row in arrival order.
 
     `order` permutes the rows (default: transmission order).  Returns
     ``(ok, P_hat, consumed)`` where `consumed` is the number of
@@ -190,15 +257,19 @@ def stream_decode(batch: EncodedBatch, s: int, order=None
     The whole batch goes through one `ingest` scan dispatch: arrivals
     past the rank-K prefix reduce to zero against the completed basis
     and are no-ops, so the decode is identical to stopping at the
-    prefix while avoiding a dispatch + host sync per arrival.
+    prefix while avoiding a dispatch + host sync per arrival.  A
+    :class:`SeededBatch` flows through the seed-addressed scan — its
+    rows are regenerated in-dispatch and the decode is bit-identical
+    to streaming the expanded batch.
     """
     K = batch.K
+    rows = batch.seeds if isinstance(batch, SeededBatch) else batch.A
     dec = StreamDecoder(K=K, L=batch.C.shape[1], s=s)
     if order is None:
-        dec.ingest(batch.A, batch.C)
+        dec.ingest(rows, batch.C)
     else:
         idx = jnp.asarray(np.asarray(order), jnp.int32)
-        dec.ingest(batch.A[idx], batch.C[idx])
+        dec.ingest(rows[idx], batch.C[idx])
     ok, P_hat = dec.decode()
     return bool(ok), P_hat, (dec.decoded_at if dec.complete
                              else dec.arrivals)

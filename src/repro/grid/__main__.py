@@ -24,13 +24,15 @@ from .spec import GridAxes
 
 
 def smoke_axes() -> GridAxes:
-    """The CI smoke grid: 2 strategies x 2 stragglers, small enough to
-    finish well under a minute on two CPU cores yet covering both the
-    StreamDecoder and the blind-box collector paths."""
+    """The CI smoke grid: small enough to finish well under a minute
+    on two CPU cores yet covering the StreamDecoder, the blind-box
+    collector, and — via the ``engine`` cells — both the materialized
+    and the seeded GF-kernel families end-to-end."""
     return GridAxes(
-        strategy=("fednc_stream", "fedavg"),
+        strategy=("fednc_stream", "fedavg", "engine"),
         straggler=("exponential", "pareto"),
         population=(2_000,),
+        kernel=("jnp_packed", "jnp_packed_seeded"),
         clients_per_round=32,
         rounds=10,
         base_seed=7,

@@ -14,6 +14,11 @@ execution backends:
 * **hierarchy** (``hier:E``) — E-edge fused coding rounds through
   :meth:`repro.engine.CodingEngine.multi_edge_round`, honoring the
   GF-kernel axis; the dropout axis becomes WAN erasure.
+* **engine** (``engine``) — flat fused coding rounds through
+  :meth:`repro.engine.CodingEngine.round`, honoring the GF-kernel
+  axis; this is where the *seeded* kernel family gets grid coverage,
+  with per-packet wire-byte accounting (4-byte seed headers vs
+  K-symbol materialized rows).
 * **async FL** (``async`` / ``async_compute``) — a miniature
   end-to-end training run through ``run_async_experiment``; the
   ``async_compute`` variant couples per-client local-training compute
@@ -32,7 +37,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .spec import ASYNC_STRATEGIES, HIER_PREFIX, SIM_STRATEGIES, ScenarioSpec
+from .spec import (ASYNC_STRATEGIES, ENGINE_STRATEGY, HIER_PREFIX,
+                   SIM_STRATEGIES, ScenarioSpec)
 
 # miniature FL workload for the async scenarios: big enough to train,
 # small enough that a grid of them stays interactive
@@ -128,6 +134,58 @@ def _hier_metrics(spec: ScenarioSpec) -> dict:
     }
 
 
+def _engine_metrics(spec: ScenarioSpec) -> dict:
+    """Flat fused engine rounds honoring the kernel axis.
+
+    This is the grid cell that exercises the *seeded* kernel family
+    end-to-end: a seeded kernel name on the axis makes `round()` draw
+    4-byte row seeds and regenerate coefficients in-kernel, and the
+    entry reports the wire economics (header bytes per packet drop
+    from K·s/8 to 4) alongside decode correctness against the known
+    packet matrix."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.channel import ErasureChannel
+    from repro.core.packets import packet_wire_bytes
+    from repro.engine import CodingEngine, EngineConfig
+
+    K = spec.clients_per_round
+    kernel = spec.kernel if spec.kernel != "-" else "auto"
+    extra = HIER_SPARES if spec.p_dropout > 0 else 0
+    engine = CodingEngine(EngineConfig(s=spec.s, kernel=kernel,
+                                       chunk_l=HIER_L,
+                                       extra_tuples=extra))
+    key = jax.random.PRNGKey(spec.seed)
+    P = jax.random.randint(jax.random.fold_in(key, 10**6),
+                           (K, HIER_L), 0, 1 << spec.s,
+                           dtype=jnp.uint8)
+    channel = (ErasureChannel(p_erase=spec.p_dropout, seed=spec.seed)
+               if spec.p_dropout > 0 else None)
+    ok_rounds = 0
+    t0 = time.perf_counter()
+    for r in range(spec.rounds):
+        out = engine.round(P, jax.random.fold_in(key, r),
+                           channel=channel)
+        if out.ok:
+            assert (out.packets == P).all()
+            ok_rounds += 1
+    wall = time.perf_counter() - t0
+    n_tuples = K + extra
+    wire = packet_wire_bytes(K, HIER_L, spec.s, seeded=engine.seeded)
+    wire_mat = packet_wire_bytes(K, HIER_L, spec.s, seeded=False)
+    return {
+        "kernel_resolved": engine.kernel_name,
+        "seeded": engine.seeded,
+        "payload_symbols": K * HIER_L,
+        "decode_rate": ok_rounds / max(spec.rounds, 1),
+        "wall_s_per_round": wall / max(spec.rounds, 1),
+        "wire_bytes_per_packet": wire,
+        "wire_bytes_per_round": wire * n_tuples,
+        "wire_overhead_ratio": wire / wire_mat,
+    }
+
+
 def _async_metrics(spec: ScenarioSpec) -> dict:
     import jax
 
@@ -193,6 +251,8 @@ def run_scenario(spec: ScenarioSpec) -> dict:
         metrics = _hier_metrics(spec)
     elif spec.strategy in ASYNC_STRATEGIES:
         metrics = _async_metrics(spec)
+    elif spec.strategy == ENGINE_STRATEGY:
+        metrics = _engine_metrics(spec)
     else:
         raise ValueError(f"unknown strategy {spec.strategy!r}")
     return {

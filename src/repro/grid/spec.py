@@ -24,6 +24,7 @@ from dataclasses import dataclass, replace
 SIM_STRATEGIES = ("fednc_stream", "fednc_stages", "fedavg")
 HIER_PREFIX = "hier:"          # "hier:4" = §III hierarchy at E=4 edges
 ASYNC_STRATEGIES = ("async", "async_compute")
+ENGINE_STRATEGY = "engine"     # flat fused engine rounds (kernel axis)
 
 
 def scenario_seed(name: str, base_seed: int = 0) -> int:
@@ -123,6 +124,10 @@ class GridAxes:
             kernel = "-"          # engine kernel fixed by FedNCConfig
             dropout = 0.0         # async driver has no dropout knob yet
             delay = 0.0           # schedule_fn owns the arrival model
+        elif strategy == ENGINE_STRATEGY:
+            delay = 0.0           # no arrival stream in a coding round
+            straggler = "-"
+            population = self.clients_per_round
         else:
             raise ValueError(f"unknown strategy {strategy!r}")
         name = (f"{strategy.replace(':', '')}-{straggler}"

@@ -31,6 +31,15 @@ kernel registry, repro.engine.registry):
                               masked shift + per-byte polynomial
                               reduction that never crosses byte lanes.
                               4x fewer vector ops per symbol.
+
+A third variant, `gf_matmul_pallas_packed_seeded`, takes (N,) uint32
+row seeds instead of the (N, K) coding matrix and regenerates its
+coefficient tile *inside* the kernel with the counter-based Threefry
+stream (`repro.core.seeds`) — the coding matrix never exists in HBM;
+only 4 bytes per output row cross the memory (and network) boundary.
+The deliberate non-choice: `pltpu.prng_random_bits` would be faster
+on TPU but is not bit-reproducible across backends, and the seeded
+family's contract is byte-identical rows everywhere.
 """
 from __future__ import annotations
 
@@ -235,4 +244,86 @@ def gf_matmul_pallas_packed(
         out_shape=jax.ShapeDtypeStruct((n, Lwp), jnp.int32),
         interpret=interpret,
     )(A, Wp)
+    return unpack_lanes(out[:, :Lw], L)
+
+
+# ---------------------------------------------------------------------------
+# seeded variant: coefficient tile regenerated in-kernel from uint32 seeds
+# ---------------------------------------------------------------------------
+
+def _packed_seeded_kernel(seed_ref, p_ref, c_ref, *, s: int, K: int):
+    """Lane-packed ladder with the A tile derived from row seeds.
+
+    `seed_ref` holds the (n, 1) uint32 seeds; the Threefry counter
+    stream rebuilds all K coefficients per row in-register before the
+    ladder runs — the (n, K) matrix never touches HBM.  Same field
+    math as `_packed_kernel`, property-tested bit-identical.
+    """
+    from repro.core.seeds import COEFFS_PER_WORD, coeff_words
+
+    seeds = seed_ref[...][:, 0]                        # (n,) uint32
+    W = p_ref[...]                                     # (K, bW) int32
+    n = seeds.shape[0]
+    words = coeff_words(seeds, -(-K // COEFFS_PER_WORD))
+    mask = jnp.int32((1 << s) - 1)
+    acc = jnp.zeros((n, W.shape[1]), jnp.int32)
+    for k in range(K):                                 # static, K small
+        w = W[k][None, :]                              # P_k · x^i ladder
+        byte = (words[:, k // COEFFS_PER_WORD]
+                >> jnp.uint32(8 * (k % COEFFS_PER_WORD)))
+        coeff = (byte.astype(jnp.int32) & mask)[:, None]
+        for i in range(s):
+            bit = (coeff >> i) & 1
+            acc = acc ^ (w * bit)
+            if i + 1 < s:
+                w = _xtime_packed(w, s)
+    c_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s", "block_w", "interpret")
+)
+def gf_matmul_pallas_packed_seeded(
+    seeds: jnp.ndarray,
+    P: jnp.ndarray,
+    *,
+    s: int = 8,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Seeded lane-packed C = rows(seeds)·P over GF(2^s).
+
+    `seeds`: (n,) uint32 row seeds; `P`: (K, L) uint8 symbols.  Row i
+    of the implicit coding matrix is `repro.core.seeds.expand_rows`
+    of seed i — regenerated inside each grid step, never materialized
+    as a kernel operand — and the result is bit-identical to
+    ``gf_matmul_pallas_packed(expand_rows(seeds, K, s), P)``.
+    """
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    P = jnp.asarray(P, jnp.uint8)
+    if seeds.ndim != 1:
+        raise ValueError(f"seeds must be (n,), got {seeds.shape}")
+    n = seeds.shape[0]
+    K, L = P.shape
+    if L == 0:
+        return jnp.zeros((n, 0), jnp.uint8)
+
+    W = pack_lanes(P)                                  # (K, Lw)
+    Lw = W.shape[1]
+    pad = (-Lw) % block_w
+    Wp = jnp.pad(W, ((0, 0), (0, pad)))
+    Lwp = Lw + pad
+    grid = (Lwp // block_w,)
+
+    out = pl.pallas_call(
+        functools.partial(_packed_seeded_kernel, s=s, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda m: (0, 0)),        # seeds resident
+            pl.BlockSpec((K, block_w), lambda m: (0, m)),  # packed tile
+        ],
+        out_specs=pl.BlockSpec((n, block_w), lambda m: (0, m)),
+        out_shape=jax.ShapeDtypeStruct((n, Lwp), jnp.int32),
+        interpret=interpret,
+    )(seeds[:, None], Wp)
     return unpack_lanes(out[:, :Lw], L)

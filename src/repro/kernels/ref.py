@@ -76,6 +76,66 @@ def gf_matmul_packed_ref(A: jnp.ndarray, P: jnp.ndarray, s: int
     return unpack_lanes(acc, L)
 
 
+# ---------------------------------------------------------------------------
+# seeded variants: coefficient rows regenerated from 4-byte seeds
+# ---------------------------------------------------------------------------
+#
+# Same contract as above but the first operand is (N,) uint32 seeds
+# instead of the (N, K) matrix; rows are derived with the counter-based
+# Threefry stream in repro.core.seeds.  `expand_rows(seeds) == A` is
+# the bit-exactness oracle tying the two families together.
+
+def gf_matmul_seeded_ref(seeds: jnp.ndarray, P: jnp.ndarray, s: int
+                         ) -> jnp.ndarray:
+    """Seeded table-oracle: expand rows, then the log/exp matmul.
+
+    The correctness reference for the seeded family — it *does*
+    materialize A (that is the point: an independent formulation the
+    fused kernels must match byte for byte).
+    """
+    from repro.core.seeds import expand_rows
+
+    A = expand_rows(seeds, int(P.shape[0]), s)
+    return get_field(s).matmul(A, P)
+
+
+def gf_matmul_packed_seeded_ref(seeds: jnp.ndarray, P: jnp.ndarray,
+                                s: int) -> jnp.ndarray:
+    """Seeded lane-packed ladder: coefficients generated in the k loop.
+
+    The xtime ladder of :func:`gf_matmul_packed_ref`, but column k's
+    coefficients come from the Threefry word stream instead of a
+    materialized A — only the (N, ceil(K/4)) uint32 word block exists
+    inside the jit, and XLA fuses its byte extraction straight into
+    the ladder's bit-select.
+    """
+    from repro.core.seeds import COEFFS_PER_WORD, coeff_words
+
+    from .gf_matmul import _xtime_packed, pack_lanes, unpack_lanes
+
+    seeds = jnp.asarray(seeds)
+    P = jnp.asarray(P, jnp.uint8)
+    K, L = P.shape
+    n = seeds.shape[0]
+    if L == 0:
+        return jnp.zeros((n, 0), jnp.uint8)
+    W = pack_lanes(P)                                  # (K, Lw)
+    words = coeff_words(seeds, -(-K // COEFFS_PER_WORD))
+    mask = jnp.int32((1 << s) - 1)
+    acc = jnp.zeros((n, W.shape[1]), jnp.int32)
+    for k in range(K):                                 # static, K small
+        w = W[k][None, :]
+        byte = (words[:, k // COEFFS_PER_WORD]
+                >> jnp.uint32(8 * (k % COEFFS_PER_WORD)))
+        coeff = (byte.astype(jnp.int32) & mask)[:, None]
+        for i in range(s):
+            bit = (coeff >> i) & 1
+            acc = acc ^ (w * bit)
+            if i + 1 < s:
+                w = _xtime_packed(w, s)
+    return unpack_lanes(acc, L)
+
+
 def gf2_matmul_ref(A: jnp.ndarray, P: jnp.ndarray) -> jnp.ndarray:
     """GF(2) fast path: coefficients in {0,1}, symbols = raw bytes.
 

@@ -148,16 +148,22 @@ class NetworkSimulator:
                             ) -> Optional[int]:
         """Measured rank evolution: feed fresh uniform coded vectors
         (support = live cohort columns) to a StreamDecoder; return the
-        arrival count reaching rank K_live (None: not within horizon)."""
+        arrival count reaching rank K_live (None: not within horizon).
+
+        Blind-box metadata per arrival is a 4-byte uint32 row seed —
+        the wire format of the seeded kernel family — not a K-symbol
+        row: the StreamDecoder regenerates each row inside its jitted
+        scan and masks dropout columns there (``col_mask``), so the
+        simulator never materializes a (prefix, K) coefficient block
+        host-side.  Determinism by SimConfig.seed is preserved (seeds
+        come from the same per-round Generator)."""
         from repro.engine.stream import StreamDecoder
         k = live.shape[0]
         k_live = int(live.sum())
-        q = 1 << self.config.s
         prefix = min(horizon, k + 32)
-        rows = rng.integers(0, q, size=(prefix, k), dtype=np.uint8)
-        rows[:, ~live] = 0
+        seeds = rng.integers(0, 1 << 32, size=prefix, dtype=np.uint32)
         dec = StreamDecoder(K=k, L=0, s=self.config.s)
-        ranks = dec.ingest(rows)
+        ranks = dec.ingest_seeded(seeds, col_mask=live)
         hit = np.nonzero(ranks >= k_live)[0]
         if hit.size == 0:
             return None

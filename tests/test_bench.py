@@ -82,6 +82,57 @@ def test_check_bench_catches_broken_grid_artifact(tmp_path):
     assert "inflation" in proc.stderr
 
 
+def test_check_bench_catches_seeded_regression(tmp_path):
+    """A seeded kernel falling below 0.9x its materialized sibling
+    must fail — regenerating rows in-kernel is supposed to be ~free."""
+    kern = json.loads((ROOT / "BENCH_kernels.json").read_text())
+    key = next(k for k in kern
+               if k.startswith("seeded_vs_materialized_"))
+    kern[key]["x"] = 0.5
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_kernels.json": kern}))
+    assert proc.returncode == 1
+    assert "seeded bar" in proc.stderr
+
+
+def test_check_bench_catches_wire_overhead_drift(tmp_path):
+    """The wire rows are exact arithmetic, (4+L)/(K+L) — a doctored
+    ratio and a dropped K row must both fail."""
+    kern = json.loads((ROOT / "BENCH_kernels.json").read_text())
+    kern["seeded_wire_overhead_K128"]["ratio"] = 0.5
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_kernels.json": kern}))
+    assert proc.returncode == 1
+    assert "(4+L)/(K+L)" in proc.stderr
+
+    kern = json.loads((ROOT / "BENCH_kernels.json").read_text())
+    del kern["seeded_wire_overhead_K512"]
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_kernels.json": kern}))
+    assert proc.returncode == 1
+    assert "seeded_wire_overhead_K512" in proc.stderr
+
+
+def test_check_bench_catches_engine_cell_violations(tmp_path):
+    """The grid's engine cells: a seeded cell whose wire ratio did not
+    shrink, and a lossless cell that dropped rounds, must fail."""
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    key = next(k for k, v in smoke["scenarios"].items()
+               if v["axes"]["strategy"] == "engine" and v["seeded"])
+    smoke["scenarios"][key]["wire_overhead_ratio"] = 1.2
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "did not shrink" in proc.stderr
+
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    smoke["scenarios"][key]["decode_rate"] = 0.5
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "lossless" in proc.stderr
+
+
 def test_check_bench_catches_grid_missing_seed(tmp_path):
     """Every scenario entry must carry its own seed (reproducibility
     is the point of the grid) — smoke artifacts included."""

@@ -24,3 +24,23 @@ def test_check_docs_passes():
         capture_output=True, text=True, timeout=600, cwd=ROOT, env=env)
     assert proc.returncode == 0, (
         f"docs drifted from the code:\n{proc.stderr}\n{proc.stdout}")
+
+
+def test_check_docs_catches_registry_name_drift(tmp_path):
+    """A kernel documented under the markers but absent from the live
+    registry (or vice versa) is a failure, not a warning — this is the
+    check that keeps README/docs tables honest when the registry
+    grows (e.g. the seeded family)."""
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    doctored = tmp_path / "README.md"
+    text = (ROOT / "README.md").read_text()
+    doctored.write_text(text.replace("`jnp_packed_seeded`",
+                                     "`jnp_packed_reseeded`", 1))
+    errors = check_docs.check_kernel_names(doctored)
+    assert errors and "registry" in errors[0]
+    # the real docs pass through the same function
+    assert check_docs.check_kernel_names(ROOT / "README.md") == []

@@ -274,5 +274,10 @@ def test_cli_smoke_writes_valid_artifact(tmp_path):
     assert proc.returncode == 0, proc.stderr
     doc = json.loads((tmp_path / "GRID_smoke.json").read_text())
     assert doc["schema"] == "fednc-grid-v1"
-    assert len(doc["scenarios"]) == 4
+    assert len(doc["scenarios"]) == 6
+    engine_cells = {k: v for k, v in doc["scenarios"].items()
+                    if v["axes"]["strategy"] == "engine"}
+    assert {v["axes"]["kernel"] for v in engine_cells.values()} == {
+        "jnp_packed", "jnp_packed_seeded"}
+    assert all(v["decode_rate"] == 1.0 for v in engine_cells.values())
     assert (tmp_path / "GRID_smoke.md").exists()

@@ -1,0 +1,367 @@
+"""Seeded coding vectors: bit-exactness vs the materialized oracle.
+
+The seeded kernel family regenerates RLNC coefficient rows from 4-byte
+Threefry seeds *inside* the GF matmul (`repro.core.seeds`).  The whole
+contract is bit-exactness — same seed ⇒ byte-identical row on every
+path — so these tests pin:
+
+* the Threefry-2x32-20 core against the published Random123
+  known-answer vectors,
+* `expand_rows` layout properties (determinism, s-bit masking, the
+  counter-stream prefix property),
+* all three seeded registry kernels against
+  ``gf_matmul_ref(expand_rows(seeds), P)``,
+* `StreamDecoder` seeded ingestion against materialized ingestion over
+  random K / block size / arrival order / duplicated (dependent) seeds
+  — hypothesis-driven when available, deterministic sweep otherwise,
+* `CodingEngine` seeded encode / recode-composition / round semantics,
+* the seed-addressed wire format and the `examples/seeded_overhead.py`
+  walkthrough (fast-tier runnable, and its numbers must be honest).
+"""
+import pathlib
+import runpy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import seeds as seedlib
+from repro.core.channel import ErasureChannel, MultiHopChannel
+from repro.core.gf import get_field
+from repro.core.packets import (pack_seed_packet, packet_wire_bytes,
+                                unpack_seed_packet)
+from repro.core.rlnc import EncodedBatch, SeededBatch
+from repro.engine import (CodingEngine, EngineConfig, StreamDecoder,
+                          is_seeded_kernel, materialized_kernel_name,
+                          resolve_kernel, seeded_kernel_name)
+from repro.kernels import ref
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SEEDED_KERNELS = ("jnp_seeded", "jnp_packed_seeded",
+                  "pallas_packed_seeded")
+
+
+# ---------------------------------------------------------------------------
+# the PRNG core: Random123 known-answer vectors
+# ---------------------------------------------------------------------------
+
+# (key0, key1, ctr0, ctr1) -> (out0, out1), Threefry-2x32 20 rounds,
+# from the Random123 distribution's kat_vectors file.
+THREEFRY_KAT = [
+    ((0x00000000, 0x00000000, 0x00000000, 0x00000000),
+     (0x6B200159, 0x99BA4EFE)),
+    ((0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF),
+     (0x1CB996FC, 0xBB002BE7)),
+    ((0x13198A2E, 0x03707344, 0x243F6A88, 0x85A308D3),
+     (0xC4923A9C, 0x483DF7A0)),
+]
+
+
+@pytest.mark.parametrize("kat", THREEFRY_KAT,
+                         ids=["zeros", "ones", "pi"])
+def test_threefry_known_answer(kat):
+    (k0, k1, x0, x1), want = kat
+    y0, y1 = seedlib.threefry2x32(k0, k1, x0, x1)
+    assert (int(y0), int(y1)) == want
+
+
+def test_threefry_broadcasts():
+    """Vectorized evaluation == element-wise evaluation."""
+    ks = jnp.array([0, 0xFFFFFFFF, 7, 9], dtype=jnp.uint32)
+    xs = jnp.array([0, 0xFFFFFFFF, 1, 2], dtype=jnp.uint32)
+    y0, y1 = seedlib.threefry2x32(ks, seedlib.KEY_SALT, xs, 0)
+    for i in range(4):
+        a0, a1 = seedlib.threefry2x32(ks[i], seedlib.KEY_SALT,
+                                      xs[i], 0)
+        assert int(y0[i]) == int(a0) and int(y1[i]) == int(a1)
+
+
+# ---------------------------------------------------------------------------
+# row expansion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [1, 2, 4, 8])
+def test_expand_rows_masks_to_field(s):
+    A = seedlib.expand_rows(jnp.arange(16, dtype=jnp.uint32), K=33, s=s)
+    assert A.shape == (16, 33) and A.dtype == jnp.uint8
+    assert int(A.max()) < (1 << s)
+
+
+def test_expand_rows_deterministic_and_distinct():
+    seeds = jnp.array([5, 5, 6], dtype=jnp.uint32)
+    A = seedlib.expand_rows(seeds, K=40)
+    B = seedlib.expand_rows(seeds, K=40)
+    np.testing.assert_array_equal(np.asarray(A), np.asarray(B))
+    assert (A[0] == A[1]).all()          # same seed, same row
+    assert not (A[0] == A[2]).all()      # different seed
+
+
+def test_expand_rows_counter_stream_prefix():
+    """Coefficient j depends only on (seed, j): widening K extends the
+    row without rewriting its prefix — the property that lets encoder
+    and decoder disagree on padding but never on coefficients."""
+    seeds = jnp.array([1, 2, 3], dtype=jnp.uint32)
+    short = seedlib.expand_rows(seeds, K=5)
+    long = seedlib.expand_rows(seeds, K=19)
+    np.testing.assert_array_equal(np.asarray(short),
+                                  np.asarray(long[:, :5]))
+
+
+def test_expand_rows_matches_word_layout():
+    """Coefficient j == byte j%4 of Threefry word j//4, masked."""
+    seed = jnp.uint32(0xDEADBEEF)
+    row = np.asarray(seedlib.expand_rows(seed[None], K=8, s=8)[0])
+    for j in range(8):
+        w0, _ = seedlib.threefry2x32(seed, seedlib.KEY_SALT,
+                                     jnp.uint32(j // 4), 0)
+        assert row[j] == (int(w0) >> (8 * (j % 4))) & 0xFF
+
+
+# ---------------------------------------------------------------------------
+# the three seeded kernels vs the materialized oracle
+# ---------------------------------------------------------------------------
+
+SHAPES = [(1, 1, 1), (4, 3, 17), (3, 9, 2049)]   # incl. padding paths
+
+
+@pytest.mark.parametrize("s", [1, 2, 4, 8])
+@pytest.mark.parametrize("name", SEEDED_KERNELS)
+@pytest.mark.parametrize("n,K,L", SHAPES)
+def test_seeded_kernel_matches_oracle(name, s, n, K, L):
+    key = jax.random.PRNGKey(n * 1000 + K * 10 + s)
+    k1, k2 = jax.random.split(key)
+    seeds = seedlib.draw_seeds(k1, n)
+    P = get_field(s).random_elements(k2, (K, L))
+    _, fn = resolve_kernel(name)
+    got = fn(seeds, P, s=s)
+    A = seedlib.expand_rows(seeds, K, s)
+    want = ref.gf_matmul_ref(A, P, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_registry_sibling_names():
+    for name in SEEDED_KERNELS:
+        assert is_seeded_kernel(name)
+        mat = materialized_kernel_name(name)
+        assert not is_seeded_kernel(mat)
+        assert seeded_kernel_name(mat) == name
+
+
+# ---------------------------------------------------------------------------
+# StreamDecoder: seeded ingestion == materialized ingestion
+# ---------------------------------------------------------------------------
+
+def _seeded_stream_case(s, K, g, L, case_seed, dup):
+    """Seeded and materialized decoders fed the same tuples (arrival
+    order shuffled, optionally with duplicated seeds — dependent rows)
+    must report identical rank trajectories and identical bytes."""
+    rng = np.random.default_rng(case_seed)
+    seeds = rng.integers(0, 1 << 32, size=g, dtype=np.uint32)
+    if dup and g >= 2:                    # force dependent rows
+        seeds[rng.integers(0, g, size=max(1, g // 3))] = seeds[0]
+    order = rng.permutation(g)
+    seeds = jnp.asarray(seeds[order])
+    f = get_field(s)
+    A = seedlib.expand_rows(seeds, K, s)
+    P = f.random_elements(jax.random.PRNGKey(case_seed), (K, L))
+    C = f.matmul(A, P)
+
+    dec_s = StreamDecoder(K=K, L=L, s=s)
+    dec_m = StreamDecoder(K=K, L=L, s=s)
+    ranks_s = dec_s.ingest_seeded(seeds, C)
+    ranks_m = dec_m.ingest(A, C)
+    np.testing.assert_array_equal(ranks_s, ranks_m)
+    assert dec_s.decoded_at == dec_m.decoded_at
+    ok_s, P_s = dec_s.decode()
+    ok_m, P_m = dec_m.decode()
+    assert ok_s == ok_m
+    if ok_s:
+        np.testing.assert_array_equal(np.asarray(P_s), np.asarray(P_m))
+        np.testing.assert_array_equal(np.asarray(P_s), np.asarray(P))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.sampled_from([1, 2, 4, 8]), K=st.integers(2, 6),
+           g=st.integers(1, 10), L=st.integers(1, 24),
+           case_seed=st.integers(0, 2**30), dup=st.booleans())
+    def test_seeded_stream_property(s, K, g, L, case_seed, dup):
+        _seeded_stream_case(s, K, g, L, case_seed, dup)
+else:
+    @pytest.mark.parametrize("s,K,g,L,case_seed,dup", [
+        (8, 5, 8, 16, 0, False), (8, 4, 9, 7, 1, True),
+        (4, 6, 10, 9, 2, False), (2, 3, 6, 24, 3, True),
+        (1, 4, 8, 7, 4, True), (8, 2, 1, 1, 5, False),
+    ])
+    def test_seeded_stream_cases(s, K, g, L, case_seed, dup):
+        """Deterministic sweep standing in when hypothesis is absent
+        (pip install -r requirements-dev.txt for the full search)."""
+        _seeded_stream_case(s, K, g, L, case_seed, dup)
+
+
+def test_stream_scalar_seed_push():
+    """push() accepts a scalar uint32 seed in place of a (K,) row."""
+    s, K, L = 8, 4, 10
+    f = get_field(s)
+    seeds = seedlib.draw_seeds(jax.random.PRNGKey(1), 6)
+    A = seedlib.expand_rows(seeds, K, s)
+    P = f.random_elements(jax.random.PRNGKey(2), (K, L))
+    C = f.matmul(A, P)
+    dec_s = StreamDecoder(K=K, L=L, s=s)
+    dec_m = StreamDecoder(K=K, L=L, s=s)
+    for g in range(6):
+        assert dec_s.push(seeds[g], C[g]) == dec_m.push(A[g], C[g])
+    assert dec_s.decoded_at == dec_m.decoded_at
+    np.testing.assert_array_equal(np.asarray(dec_s.decode()[1]),
+                                  np.asarray(P))
+
+
+def test_stream_ingest_autodetects_seed_block():
+    """A 1-D uint32 block through plain ingest() routes to the seeded
+    path — callers never branch on wire format."""
+    s, K, L = 8, 3, 5
+    seeds = seedlib.draw_seeds(jax.random.PRNGKey(3), 5)
+    f = get_field(s)
+    A = seedlib.expand_rows(seeds, K, s)
+    P = f.random_elements(jax.random.PRNGKey(4), (K, L))
+    C = f.matmul(A, P)
+    via_ingest = StreamDecoder(K=K, L=L, s=s).ingest(seeds, C)
+    via_seeded = StreamDecoder(K=K, L=L, s=s).ingest_seeded(seeds, C)
+    np.testing.assert_array_equal(via_ingest, via_seeded)
+
+
+def test_stream_col_mask_equals_masked_rows():
+    """col_mask dropout == zeroing the dead sources' coefficients in
+    the materialized rows (the simulator's semantics)."""
+    s, K, g, L = 8, 6, 12, 8
+    rng = np.random.default_rng(7)
+    seeds = jnp.asarray(rng.integers(0, 1 << 32, g, dtype=np.uint32))
+    live = np.ones(K, bool)
+    live[[1, 4]] = False
+    f = get_field(s)
+    A = np.asarray(seedlib.expand_rows(seeds, K, s)).copy()
+    P = f.random_elements(jax.random.PRNGKey(5), (K, L))
+    C = f.matmul(jnp.asarray(A), P)      # payloads from the full rows
+    A[:, ~live] = 0
+    dec_s = StreamDecoder(K=K, L=L, s=s)
+    dec_m = StreamDecoder(K=K, L=L, s=s)
+    ranks_s = dec_s.ingest_seeded(seeds, C, col_mask=jnp.asarray(live))
+    ranks_m = dec_m.ingest(jnp.asarray(A), C)
+    np.testing.assert_array_equal(ranks_s, ranks_m)
+    np.testing.assert_array_equal(np.asarray(dec_s.basis()),
+                                  np.asarray(dec_m.basis()))
+
+
+# ---------------------------------------------------------------------------
+# CodingEngine: seeded encode / recode / round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SEEDED_KERNELS)
+def test_engine_encode_seeded_matches_materialized(name):
+    s, K, L = 8, 6, 700
+    eng = CodingEngine(EngineConfig(s=s, kernel=name, chunk_l=256))
+    mat = CodingEngine(EngineConfig(
+        s=s, kernel=materialized_kernel_name(name), chunk_l=256))
+    P = get_field(s).random_elements(jax.random.PRNGKey(0), (K, L))
+    seeds = eng.coding_seeds(jax.random.PRNGKey(1), K + 2)
+    sb = eng.encode_seeded(P, seeds)
+    assert isinstance(sb, SeededBatch) and sb.K == K
+    mb = mat.encode(P, eng.expand_seeds(seeds, K))
+    np.testing.assert_array_equal(np.asarray(sb.C), np.asarray(mb.C))
+    # any engine consumes either wire format: the materialized engine
+    # fed the seed vector produces the identical batch
+    sb2 = mat.encode(P, seeds)
+    assert isinstance(sb2, SeededBatch)
+    np.testing.assert_array_equal(np.asarray(sb2.C), np.asarray(sb.C))
+
+
+def test_engine_recode_composes_seeded_batch():
+    """Prop. 2 at a relay holding seed-addressed tuples: recode output
+    is materialized (R·A has no 4-byte seed) and bit-identical to
+    recoding the expanded batch."""
+    s, K, n, L = 8, 5, 7, 64
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp_packed_seeded"))
+    P = get_field(s).random_elements(jax.random.PRNGKey(2), (K, L))
+    sb = eng.encode_seeded(P, eng.coding_seeds(jax.random.PRNGKey(3), n))
+    R = eng.field.random_elements(jax.random.PRNGKey(4), (6, n))
+    relay = eng.recode_with(R, sb)
+    assert isinstance(relay, EncodedBatch)
+    oracle = eng.recode_with(R, sb.expand(s))
+    np.testing.assert_array_equal(np.asarray(relay.A),
+                                  np.asarray(oracle.A))
+    np.testing.assert_array_equal(np.asarray(relay.C),
+                                  np.asarray(oracle.C))
+    ok, P_hat = eng.decode(relay)
+    assert ok
+    np.testing.assert_array_equal(np.asarray(P_hat), np.asarray(P))
+
+
+@pytest.mark.parametrize("channel", [
+    None,
+    ErasureChannel(0.2, seed=11),
+    MultiHopChannel(2, seed=12),
+], ids=["ideal", "erasure", "multihop"])
+def test_engine_seeded_round_decodes(channel):
+    s, K, L = 8, 6, 300
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp_packed_seeded",
+                                    chunk_l=128, extra_tuples=8))
+    P = get_field(s).random_elements(jax.random.PRNGKey(6), (K, L))
+    out = eng.round(P, jax.random.PRNGKey(7), channel=channel)
+    assert out.ok
+    np.testing.assert_array_equal(np.asarray(out.packets),
+                                  np.asarray(P))
+
+
+def test_coding_seeds_rejects_structured_rows():
+    """Systematic / sparse rows are not derivable from a 4-byte seed."""
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="uniform RLNC"):
+        CodingEngine(EngineConfig(s=8, systematic=True)
+                     ).coding_seeds(key, 4)
+    with pytest.raises(ValueError, match="uniform RLNC"):
+        CodingEngine(EngineConfig(s=8, coding_density=0.5)
+                     ).coding_seeds(key, 4)
+
+
+# ---------------------------------------------------------------------------
+# the wire format + the example
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [4, 8])
+def test_seed_packet_roundtrip(s):
+    payload = get_field(s).random_elements(jax.random.PRNGKey(8), (40,))
+    seed = jnp.uint32(0x01234567)
+    buf = pack_seed_packet(seed, payload, s)
+    assert buf.nbytes == packet_wire_bytes(0, 40, s, seeded=True)
+    got_seed, got_payload = unpack_seed_packet(buf, s)
+    assert int(got_seed) == 0x01234567
+    np.testing.assert_array_equal(np.asarray(got_payload[:40]),
+                                  np.asarray(payload))
+
+
+def test_packet_wire_bytes_headline_numbers():
+    for K in (32, 128, 512):
+        mat = packet_wire_bytes(K, 4096, 8, seeded=False)
+        sed = packet_wire_bytes(K, 4096, 8, seeded=True)
+        assert mat == K + 4096 and sed == 4 + 4096
+    assert packet_wire_bytes(128, 4096, 8, seeded=True) == 4100
+
+
+def test_seeded_overhead_example_runs():
+    """examples/seeded_overhead.py is fast-tier runnable and its
+    printed accounting is honest."""
+    mod = runpy.run_path(
+        str(ROOT / "examples" / "seeded_overhead.py"))
+    stats = mod["main"]()
+    assert stats["K"] == 128
+    assert stats["bytes_per_packet_seeded"] == packet_wire_bytes(
+        128, stats["L"], 8, seeded=True)
+    assert stats["round_ratio"] < 1.0
