@@ -1,0 +1,144 @@
+"""Decode-server benchmark: continuous batching vs per-job dispatch.
+
+One Poisson multi-tenant trace (mixed seeded + materialized wire
+formats) is replayed through the same `DecodeServer` twice: once with
+the bank advancing every slot in ONE vmapped dispatch per scheduler
+tick (``batched``), once with the identical kernel dispatched per job
+(``sequential``) — the only difference between the modes is dispatch
+granularity, so the throughput gap IS the continuous-batching win.
+
+Writes ``BENCH_serve.json``:
+
+* ``config`` — trace + server shape (``smoke: true`` relaxes the bar
+  for the CI smoke artifact).
+* ``serve_batched`` / ``serve_sequential`` — packets/s, p50/p99 job
+  completion latency, ticks, dispatches, max concurrent jobs (best of
+  ``reps`` replays, after a warm-up replay to absorb jit compiles).
+* ``batched_vs_sequential`` — ``x`` = throughput ratio at
+  ``concurrent_jobs`` jobs in flight.  Bar (scripts/check_bench.py):
+  x ≥ 1.5 with ≥ 8 concurrent jobs.
+* ``payloads_match`` — both modes decoded byte-identical payloads at
+  identical completion arrival counts (checked every replay).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.serve import poisson_multitenant_trace, serve_trace
+
+from .common import emit
+
+JOBS = 24        # tenant rounds in the trace (3 waves over 8 slots)
+K = 16           # generation size per round
+L = 256          # payload symbols per packet
+S = 8
+SLOTS = 8        # concurrent jobs in the decoder bank
+G_TICK = 8       # packets per job per tick
+EXTRA = 6        # redundant tuples per round
+TRACE_SEED = 11
+
+SMOKE = {"jobs": 10, "K": 8, "L": 64, "slots": 8, "g_tick": 4,
+         "extra": 3, "reps": 1}
+
+
+def _serve_stats(trace, *, slots, g_tick, batched, reps):
+    """Best-of-`reps` replay (server state is rebuilt each time)."""
+    best, sig = None, None
+    for _ in range(reps):
+        rep = serve_trace(trace, slots=slots, g_tick=g_tick,
+                          batched=batched)
+        if best is None or rep.wall_s < best.wall_s:
+            best = rep
+        s = [(c.job, c.arrivals, c.payload_sha) for c in rep.completions]
+        assert sig is None or sig == s, "replay drifted across reps"
+        sig = s
+    p50, p99 = best.latency_percentiles()
+    entry = {
+        "mode": "batched" if batched else "sequential",
+        "jobs": best.jobs, "completed": best.completed,
+        "packets": best.packets_ingested,
+        "late_dropped": best.late_dropped,
+        "ticks": best.ticks, "dispatches": best.dispatches,
+        "max_concurrent": best.max_concurrent,
+        "wall_s": best.wall_s, "packets_per_s": best.packets_per_s,
+        "p50_latency_s": p50, "p99_latency_s": p99,
+    }
+    return entry, sig
+
+
+def run(fast: bool = False, smoke: bool = False,
+        json_path: str = "BENCH_serve.json") -> dict:
+    if smoke:
+        jobs, k, l = SMOKE["jobs"], SMOKE["K"], SMOKE["L"]
+        slots, g_tick = SMOKE["slots"], SMOKE["g_tick"]
+        extra, reps = SMOKE["extra"], SMOKE["reps"]
+    else:
+        jobs, k, l, slots, g_tick, extra = (JOBS, K, L, SLOTS, G_TICK,
+                                            EXTRA)
+        reps = 2 if fast else 4
+    trace = poisson_multitenant_trace(
+        jobs, k, l, s=S, rate=4.0, extra_packets=extra,
+        seeded="mixed", duplicate_rate=0.05, seed=TRACE_SEED)
+
+    # warm-up replays compile the (slots, g_tick) batched program and
+    # the per-slot sequential program before anything is timed
+    serve_trace(trace, slots=slots, g_tick=g_tick, batched=True)
+    serve_trace(trace, slots=slots, g_tick=g_tick, batched=False)
+
+    bat, sig_b = _serve_stats(trace, slots=slots, g_tick=g_tick,
+                              batched=True, reps=reps)
+    seq, sig_s = _serve_stats(trace, slots=slots, g_tick=g_tick,
+                              batched=False, reps=reps)
+
+    x = bat["packets_per_s"] / seq["packets_per_s"]
+    results = {
+        "config": {
+            "jobs": jobs, "K": k, "L": l, "s": S, "slots": slots,
+            "g_tick": g_tick, "extra_packets": extra,
+            "duplicate_rate": 0.05, "trace_seed": TRACE_SEED,
+            "packets": trace.n_packets,
+            "wire_bytes": trace.wire_bytes(),
+            "reps": reps, "smoke": bool(smoke),
+        },
+        "serve_batched": bat,
+        "serve_sequential": seq,
+        "batched_vs_sequential": {
+            "x": x, "concurrent_jobs": bat["max_concurrent"],
+        },
+        "payloads_match": sig_b == sig_s,
+    }
+
+    for entry in (bat, seq):
+        emit(f"serve_{entry['mode']}", entry["wall_s"] * 1e6,
+             f"pkts_per_s={entry['packets_per_s']:.0f};"
+             f"p50={entry['p50_latency_s'] * 1e3:.1f}ms;"
+             f"p99={entry['p99_latency_s'] * 1e3:.1f}ms;"
+             f"ticks={entry['ticks']};"
+             f"dispatches={entry['dispatches']}")
+    emit("serve_batched_vs_sequential", 0.0,
+         f"x={x:.2f};concurrent={bat['max_concurrent']};"
+         f"match={results['payloads_match']}")
+
+    pathlib.Path(json_path).write_text(json.dumps(results, indent=2))
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace, bar relaxed (CI smoke artifact)")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    path = args.json or ("BENCH_serve_smoke.json" if args.smoke
+                         else "BENCH_serve.json")
+    print("name,us_per_call,derived")
+    run(fast=args.fast, smoke=args.smoke, json_path=path)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                            delay-reorder x dropout x population x GF
                            kernel, + the delay-reordered FedAvg sweep
                            and compute-coupled arrivals (GRID_grid.json)
+  bench_serve              multi-tenant decode server: continuous
+                           batching vs per-job dispatch, packets/s +
+                           p50/p99 job latency (BENCH_serve.json)
 
 See benchmarks/README.md for every suite and JSON field.
 """
@@ -39,7 +42,7 @@ def main() -> None:
     from . import (bench_collective, bench_coupon,
                    bench_error_probability, bench_fl_accuracy,
                    bench_grid, bench_kernels, bench_robustness,
-                   bench_scale, bench_sim)
+                   bench_scale, bench_serve, bench_sim)
 
     suites = [
         ("error_probability",
@@ -56,6 +59,7 @@ def main() -> None:
         ("collective", bench_collective.run),
         ("sim", lambda: bench_sim.run(rounds=40 if args.fast else 100)),
         ("grid", lambda: bench_grid.run(fast=args.fast)),
+        ("serve", lambda: bench_serve.run(fast=args.fast)),
     ]
     print("name,us_per_call,derived")
     failures = 0

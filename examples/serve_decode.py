@@ -1,26 +1,62 @@
-"""Serving example: batched prefill + greedy decode on any arch config.
+"""Multi-tenant decode serving: batched vs per-job dispatch.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-8b
+Many federated rounds land on one decode server at once; each round is
+a *job* with its own reduced-basis state in a `DecoderBank` slot, and
+every scheduler tick drains all queues into ONE lane-packed ingest
+dispatch (continuous batching).  This example generates a Poisson
+multi-tenant trace (mixed seeded + materialized wire formats), serves
+it twice — batched and per-job sequential — and shows the two modes
+produce byte-identical decodes while the batched server does a
+fraction of the dispatches.
+
+    PYTHONPATH=src python examples/serve_decode.py
 """
-import argparse
-import subprocess
-import sys
+from repro.serve import poisson_multitenant_trace, serve_trace
+
+JOBS = 10        # concurrent federated rounds
+K = 12           # generation size per round
+L = 256          # payload symbols per packet
+SLOTS = 8        # decoder-bank slots (rounds in flight)
+EXTRA = 5        # redundant tuples per round beyond K
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+def main() -> dict:
+    trace = poisson_multitenant_trace(
+        JOBS, K, L, rate=4.0, extra_packets=EXTRA, seeded="mixed",
+        duplicate_rate=0.1, seed=7)
 
-    cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--arch", args.arch, "--batch", str(args.batch),
-           "--new-tokens", str(args.new_tokens)]
-    if not args.full:
-        cmd.append("--reduced")
-    raise SystemExit(subprocess.call(cmd))
+    batched = serve_trace(trace, slots=SLOTS, g_tick=8, batched=True)
+    seq = serve_trace(trace, slots=SLOTS, g_tick=8, batched=False)
+
+    def sig(r):
+        return [(c.job, c.arrivals, c.payload_sha)
+                for c in r.completions]
+
+    assert sig(batched) == sig(seq), "batched decode drifted"
+    assert batched.completed == JOBS
+
+    p50, p99 = batched.latency_percentiles()
+    stats = {
+        "jobs": JOBS, "K": K, "L": L, "slots": SLOTS,
+        "packets": batched.packets_ingested,
+        "ticks": batched.ticks,
+        "dispatches_batched": batched.dispatches,
+        "dispatches_sequential": seq.dispatches,
+        "max_concurrent": batched.max_concurrent,
+        "completed": batched.completed,
+        "p50_latency_s": p50, "p99_latency_s": p99,
+    }
+
+    print(f"{JOBS} rounds x (K={K}+{EXTRA}) tuples, L={L}, "
+          f"{SLOTS} slots, mixed seeded/materialized wire")
+    print(f"  batched:    {batched.ticks} ticks -> "
+          f"{batched.dispatches} dispatches, all {batched.completed} "
+          "jobs decoded")
+    print(f"  sequential: {seq.ticks} ticks -> "
+          f"{seq.dispatches} dispatches, byte-identical payloads")
+    print(f"  p50 job latency {p50 * 1e3:.0f} ms, p99 {p99 * 1e3:.0f} ms "
+          "(includes one-off jit compile)")
+    return stats
 
 
 if __name__ == "__main__":

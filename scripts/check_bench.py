@@ -15,8 +15,11 @@ machine-readable ``BENCH_*.json`` artifacts the same treatment:
    throughput at matched shapes with wire overhead exactly
    (4+L)/(K+L), fused ≥ 1x per-edge hierarchy wall time, the
    simulator's measured draw ratio within 10% of the Prop. 1
-   prediction, and the 10^6-client / 100-round simulation under 60 s
-   of CPU wall clock.
+   prediction, the 10^6-client / 100-round simulation under 60 s of
+   CPU wall clock, and the decode server's continuous batching ≥ 1.5x
+   sequential per-job ingest at ≥ 8 concurrent jobs with byte-identical
+   payloads (``BENCH_serve.json``; ``BENCH_serve_*.json`` smoke
+   artifacts are schema-checked with the bar relaxed).
 
 The scenario-grid artifacts (``GRID_*.json``, schema
 ``fednc-grid-v1`` from ``repro.grid``) get the same treatment:
@@ -188,6 +191,56 @@ def check_sim(name: str, data: dict) -> list[str]:
     return errors
 
 
+SERVE_MODES = ("serve_batched", "serve_sequential")
+SERVE_ENTRY_FIELDS = (
+    "mode", "jobs", "completed", "packets", "ticks", "dispatches",
+    "max_concurrent", "wall_s", "packets_per_s", "p50_latency_s",
+    "p99_latency_s",
+)
+#: continuous batching must beat per-job dispatch by this much...
+SERVE_SPEEDUP_BAR = 1.5
+#: ...with at least this many jobs genuinely in flight
+SERVE_MIN_CONCURRENT = 8
+
+
+def check_serve(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    cfg = data.get("config")
+    if cfg is None:
+        return [f"{name}: missing 'config'"]
+    smoke = bool(cfg.get("smoke"))
+    for mode in SERVE_MODES:
+        entry = data.get(mode)
+        if entry is None:
+            errors.append(f"{name}: missing {mode!r}")
+            continue
+        if not _require(name, entry, mode, SERVE_ENTRY_FIELDS, errors):
+            continue
+        if entry["completed"] < entry["jobs"]:
+            errors.append(f"{name}: {mode} decoded only "
+                          f"{entry['completed']}/{entry['jobs']} jobs")
+        if entry["p99_latency_s"] < entry["p50_latency_s"]:
+            errors.append(f"{name}: {mode} p99 < p50 latency")
+    if data.get("payloads_match") is not True:
+        errors.append(f"{name}: batched and sequential decodes are "
+                      "not byte-identical (payloads_match != true)")
+    ratio = data.get("batched_vs_sequential")
+    if ratio is None:
+        return errors + [f"{name}: missing 'batched_vs_sequential'"]
+    if not _require(name, ratio, "batched_vs_sequential",
+                    ("x", "concurrent_jobs"), errors) or smoke:
+        return errors
+    if ratio["concurrent_jobs"] < SERVE_MIN_CONCURRENT:
+        errors.append(
+            f"{name}: only {ratio['concurrent_jobs']} concurrent jobs "
+            f"(bar: >= {SERVE_MIN_CONCURRENT})")
+    if ratio["x"] < SERVE_SPEEDUP_BAR:
+        errors.append(
+            f"{name}: batched ingest {ratio['x']:.2f}x sequential "
+            f"(bar: >= {SERVE_SPEEDUP_BAR}x)")
+    return errors
+
+
 GRID_SCHEMA = "fednc-grid-v1"
 GRID_AXES = ("strategy", "straggler", "delay_spread", "p_dropout",
              "population", "kernel")
@@ -291,18 +344,22 @@ CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_hierarchy.json": check_hierarchy,
     "BENCH_sim.json": check_sim,
+    "BENCH_serve.json": check_serve,
     "GRID_grid.json": check_grid,
 }
 
 
 def main() -> int:
     errors: list[str] = []
-    # extra GRID_* artifacts (smoke runs, ad-hoc grids) are optional
-    # but must be well-formed when present
+    # extra GRID_*/BENCH_serve_* artifacts (smoke runs, ad-hoc
+    # sweeps) are optional but must be well-formed when present
     extra = sorted(p.name for p in ROOT.glob("GRID_*.json")
                    if p.name not in CHECKS)
     checks = dict(CHECKS)
     checks.update({fname: check_grid for fname in extra})
+    checks.update({p.name: check_serve
+                   for p in sorted(ROOT.glob("BENCH_serve_*.json"))
+                   if p.name not in CHECKS})
     for fname, check in checks.items():
         path = ROOT / fname
         if not path.exists():

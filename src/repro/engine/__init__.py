@@ -22,12 +22,13 @@ from .registry import (available_kernels, gf_matmul, is_seeded_kernel,
                        resolve_kernel, resolve_kernel_name,
                        seeded_kernel_name)
 from .select import incremental_select
-from .stream import StreamDecoder, stream_decode
+from .stream import DecoderBank, StreamDecoder, stream_decode
 
 __all__ = [
     "CodingEngine", "DEFAULT_CHUNK_L", "EngineConfig", "EngineRound",
     "get_engine", "available_kernels", "gf_matmul", "register_kernel",
     "resolve_kernel", "resolve_kernel_name", "is_seeded_kernel",
     "seeded_kernel_name", "materialized_kernel_name",
-    "incremental_select", "StreamDecoder", "stream_decode",
+    "incremental_select", "DecoderBank", "StreamDecoder",
+    "stream_decode",
 ]

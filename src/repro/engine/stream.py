@@ -245,6 +245,218 @@ class StreamDecoder:
         return self._B
 
 
+@functools.lru_cache(maxsize=None)
+def _bank_fns(s: int, K: int):
+    """The multi-tenant tick kernel: one scan over a padded row block.
+
+    Shared by the batched (vmapped over job slots — ONE dispatch per
+    tick regardless of how many jobs are in flight) and the sequential
+    (one dispatch per slot; the serving benchmark's baseline) paths, so
+    the two differ only in dispatch granularity, never in math.
+
+    Each scan step consumes one wire tuple that may be *either* format:
+    ``use_seed`` selects between the materialized (K,) row and the row
+    regenerated in-dispatch from the 4-byte seed (`repro.core.seeds` —
+    counter-based, so expanding to the bank-wide padded K and masking
+    is bit-identical to expanding to the job's own K).  ``valid=False``
+    rows (scheduler padding) and masked columns (per-job generation
+    size / dropout) are zeroed before reduction — a zero row has zero
+    residual, so padding is an exact no-op on [B | Y] and on the rank
+    trajectory."""
+    field = get_field(s)
+
+    def one(B, Y, filled, rows, seeds, use_seed, valid, C, col_mask):
+        def body(carry, x):
+            B, Y, filled = carry
+            row, seed, use, ok, c = x
+            gen = expand_rows(seed[None], K, s)[0]
+            a = jnp.where(use, gen, row)
+            a = jnp.where(col_mask & ok, a, jnp.uint8(0))
+            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
+            return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
+
+        (B, Y, filled), ranks = jax.lax.scan(
+            body, (B, Y, filled), (rows, seeds, use_seed, valid, C))
+        return B, Y, filled, ranks
+
+    return jax.jit(jax.vmap(one)), jax.jit(one)
+
+
+class DecoderBank:
+    """J :class:`StreamDecoder` states advanced by one batched dispatch.
+
+    The serving layer (`repro.serve`) holds many federated rounds in
+    flight at once; each *slot* of the bank is one job's reduced-basis
+    state ``[B | Y]`` (exactly the single-job invariant documented
+    above), stacked along a leading jobs axis.  :meth:`ingest` consumes
+    a padded ``(slots, g)`` tick block of arrivals for ALL jobs as one
+    vmapped `lax.scan` — the continuous-batching analogue of a
+    chunked-prefill step, with per-job basis state playing the role of
+    per-request prefix state.
+
+    All slots share the bank-wide padded shape (``K`` coefficient
+    columns, ``L`` payload symbols); a job with a smaller generation
+    size ``k`` simply masks the columns beyond ``k`` (and a shorter
+    payload zero-pads — GF row ops never mix columns, so padding
+    columns stay zero).  Bit-exactness vs. per-job StreamDecoders is
+    property-tested in tests/test_serve.py.
+
+    >>> import jax.numpy as jnp
+    >>> bank = DecoderBank(slots=2, K=2, L=4)
+    >>> bank.open(0, k=2), bank.open(1, k=2)
+    (0, 1)
+    >>> P = jnp.arange(8, dtype=jnp.uint8).reshape(2, 4)
+    >>> eye = jnp.eye(2, dtype=jnp.uint8)
+    >>> ranks = bank.ingest(rows=jnp.stack([eye, eye]),
+    ...                     C=jnp.stack([P, P ^ 1]))
+    >>> ranks.tolist()                     # both jobs, one dispatch
+    [[1, 2], [1, 2]]
+    >>> bank.complete.tolist()
+    [True, True]
+    >>> bool((bank.payload(1) == (P ^ 1)).all())
+    True
+    """
+
+    def __init__(self, slots: int, K: int, L: int, s: int = 8):
+        self.slots, self.K, self.L, self.s = (int(slots), int(K),
+                                              int(L), int(s))
+        self._B = jnp.zeros((self.slots, self.K, self.K), jnp.uint8)
+        self._Y = jnp.zeros((self.slots, self.K, self.L), jnp.uint8)
+        self._filled = jnp.zeros((self.slots, self.K), jnp.bool_)
+        self._col_mask = np.zeros((self.slots, self.K), bool)
+        self._k = np.zeros((self.slots,), np.int64)   # 0 = slot closed
+        self._l = np.zeros((self.slots,), np.int64)
+        self.dispatches = 0
+
+    # -- slot lifecycle ---------------------------------------------------
+
+    def open(self, slot: int, k: int, l: Optional[int] = None,
+             col_mask=None) -> int:
+        """(Re)initialize `slot` for a job with generation size `k`.
+
+        `col_mask` (k,) bool masks dropped sources (the StreamDecoder
+        ``col_mask`` semantics); columns beyond `k` are always masked.
+        Returns the slot index."""
+        slot = int(slot)
+        if not 0 < k <= self.K:
+            raise ValueError(f"job k={k} exceeds bank K={self.K}")
+        l = self.L if l is None else int(l)
+        if l > self.L:
+            raise ValueError(f"job L={l} exceeds bank L={self.L}")
+        self._B = self._B.at[slot].set(jnp.uint8(0))
+        self._Y = self._Y.at[slot].set(jnp.uint8(0))
+        self._filled = self._filled.at[slot].set(False)
+        mask = np.zeros((self.K,), bool)
+        mask[:k] = True if col_mask is None else np.asarray(col_mask,
+                                                            bool)[:k]
+        self._col_mask[slot] = mask
+        self._k[slot] = k
+        self._l[slot] = l
+        return slot
+
+    def close(self, slot: int) -> None:
+        """Retire a slot (its state stays until the next `open`)."""
+        self._k[int(slot)] = 0
+
+    @property
+    def open_slots(self) -> np.ndarray:
+        return np.nonzero(self._k > 0)[0]
+
+    @property
+    def target(self) -> np.ndarray:
+        """(slots,) per-job target rank (0 for closed slots)."""
+        return self._k.copy()
+
+    @property
+    def rank(self) -> np.ndarray:
+        return np.asarray(jnp.sum(self._filled, axis=1))
+
+    @property
+    def complete(self) -> np.ndarray:
+        """(slots,) — open slots whose basis reached their target rank."""
+        return (self._k > 0) & (self.rank >= self._k)
+
+    # -- the tick ---------------------------------------------------------
+
+    def _tick_args(self, rows, seeds, use_seed, valid, C):
+        g = None
+        for arr in (rows, seeds, C):
+            if arr is not None:
+                g = int(jnp.asarray(arr).shape[1])
+                break
+        if g is None:
+            raise ValueError("need rows, seeds, or C to size the tick")
+        J, K, L = self.slots, self.K, self.L
+        rows = (jnp.zeros((J, g, K), jnp.uint8) if rows is None
+                else jnp.asarray(rows, jnp.uint8))
+        seeds = (jnp.zeros((J, g), jnp.uint32) if seeds is None
+                 else jnp.asarray(seeds, jnp.uint32))
+        use_seed = (jnp.zeros((J, g), jnp.bool_) if use_seed is None
+                    else jnp.asarray(use_seed, jnp.bool_))
+        valid = (jnp.ones((J, g), jnp.bool_) if valid is None
+                 else jnp.asarray(valid, jnp.bool_))
+        C = (jnp.zeros((J, g, L), jnp.uint8) if C is None
+             else jnp.asarray(C, jnp.uint8))
+        return rows, seeds, use_seed, valid, C
+
+    def ingest(self, rows=None, seeds=None, use_seed=None, valid=None,
+               C=None, *, batched: bool = True) -> np.ndarray:
+        """Advance every slot by one padded (slots, g) tick block.
+
+        `rows` (slots, g, K) uint8 materialized coding rows, `seeds`
+        (slots, g) uint32 row seeds, `use_seed` (slots, g) bool format
+        selector per tuple, `valid` (slots, g) bool padding mask, `C`
+        (slots, g, L) uint8 payloads; omitted arrays default to zeros
+        (and `valid` to all-true).  Returns the (slots, g) rank-after-
+        each-arrival trajectory.
+
+        ``batched=True`` advances all slots in ONE vmapped dispatch;
+        ``batched=False`` runs the identical per-slot kernel once per
+        slot holding work — the sequential per-job baseline the serving
+        benchmark measures against.  Both paths are bit-identical.
+        """
+        rows, seeds, use_seed, valid, C = self._tick_args(
+            rows, seeds, use_seed, valid, C)
+        mask = jnp.asarray(self._col_mask)
+        batched_fn, single_fn = _bank_fns(self.s, self.K)
+        if batched:
+            self._B, self._Y, self._filled, ranks = batched_fn(
+                self._B, self._Y, self._filled, rows, seeds, use_seed,
+                valid, C, mask)
+            self.dispatches += 1
+            return np.asarray(ranks)
+        ranks = np.zeros(valid.shape, np.int32)
+        work = np.asarray(jnp.any(valid, axis=1))
+        base = self.rank
+        for j in range(self.slots):
+            if not work[j]:
+                ranks[j] = base[j]
+                continue
+            Bj, Yj, fj, rj = single_fn(
+                self._B[j], self._Y[j], self._filled[j], rows[j],
+                seeds[j], use_seed[j], valid[j], C[j], mask[j])
+            self._B = self._B.at[j].set(Bj)
+            self._Y = self._Y.at[j].set(Yj)
+            self._filled = self._filled.at[j].set(fj)
+            self.dispatches += 1
+            ranks[j] = np.asarray(rj)
+        return ranks
+
+    # -- results ----------------------------------------------------------
+
+    def payload(self, slot: int) -> jnp.ndarray:
+        """The decoded (k, l) packet matrix of a complete slot.
+
+        At rank k the basis restricted to the job's columns is the
+        identity, so rows [0, k) of Y are the decoded packets."""
+        slot = int(slot)
+        k, l = int(self._k[slot]), int(self._l[slot])
+        return self._Y[slot, :k, :l]
+
+    def basis(self, slot: int) -> jnp.ndarray:
+        return self._B[int(slot)]
+
+
 def stream_decode(batch, s: int, order=None
                   ) -> tuple[bool, Optional[jnp.ndarray], int]:
     """Decode an EncodedBatch (or SeededBatch) row-by-row in arrival order.

@@ -1,63 +1,20 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving launcher: the multi-tenant rank-K decode server.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-        --reduced --batch 4 --prompt-len 64 --new-tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --jobs 12 --K 16 --L 64
+
+The seed-era LM prefill + greedy-decode loop that used to live here is
+retired — "serving" in this repo means decoding many concurrent
+federated rounds, which is `repro.serve` (continuous-batching
+DecoderBank, see docs/serving.md).  This module forwards to that CLI
+so the launch entry point keeps working; the LM serve *step* itself
+survives in `repro.launch.steps.make_serve_step` for the dry-run
+pipeline.
 """
 from __future__ import annotations
 
-import argparse
-import time
+from repro.serve.cli import build_parser, main
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, reduced_config
-from repro.launch.steps import make_serve_step
-from repro.models import transformer as tf
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = (reduced_config(args.arch) if args.reduced
-           else get_config(args.arch))
-    key = jax.random.PRNGKey(0)
-    params = tf.init_lm(key, cfg)
-
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    memory = None
-    if cfg.frontend:
-        memory = jax.random.normal(
-            key, (B, cfg.num_frontend_tokens, cfg.d_model), cfg.dtype)
-
-    t0 = time.time()
-    logits, cache = tf.prefill(params, prompts, cfg,
-                               cache_len=S + args.new_tokens,
-                               memory=memory)
-    tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    serve = jax.jit(make_serve_step(cfg))
-    out = [tok]
-    t1 = time.time()
-    for _ in range(args.new_tokens - 1):
-        tok, lp, cache = serve(params, cache, tok)
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
-    dt = time.time() - t1
-    print(f"arch={cfg.name} B={B} prompt={S} new={args.new_tokens}")
-    print(f"prefill: {t_prefill:.2f}s  decode: "
-          f"{dt / max(args.new_tokens - 1, 1) * 1000:.1f} ms/token")
-    print("sample token ids:", np.asarray(toks[0, :16]))
-
+__all__ = ["build_parser", "main"]
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,26 @@
+"""repro.serve — the multi-tenant decode server.
+
+trace.py     — ServeJob/ServeTrace arrival streams (JSON round-trip)
+               and the Poisson multi-tenant workload generator built
+               on repro.sim's straggler distributions.
+scheduler.py — FifoScheduler: per-slot FIFO queues drained into
+               fixed-shape padded tick blocks (continuous batching).
+server.py    — DecodeServer over engine.DecoderBank: one ingest
+               dispatch per tick across every in-flight round, rank-K
+               completion events, waiting-job admission; serve_trace
+               offline replay driver -> ServeReport.
+cli.py       — `python -m repro.serve`: build/load a trace, serve it,
+               print and optionally dump the report.
+
+See docs/serving.md for the architecture guide.
+"""
+from .scheduler import FifoScheduler
+from .server import (DecodeServer, JobCompletion, ServeReport,
+                     payload_digest, serve_trace)
+from .trace import ServeJob, ServeTrace, poisson_multitenant_trace
+
+__all__ = [
+    "DecodeServer", "FifoScheduler", "JobCompletion", "ServeJob",
+    "ServeReport", "ServeTrace", "payload_digest",
+    "poisson_multitenant_trace", "serve_trace",
+]

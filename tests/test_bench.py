@@ -36,8 +36,8 @@ def _doctored_tree(tmp_path, replace: dict) -> pathlib.Path:
     (root / "scripts" / "check_bench.py").write_text(
         (ROOT / "scripts" / "check_bench.py").read_text())
     for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json",
-                  "BENCH_sim.json", "GRID_grid.json",
-                  "GRID_smoke.json"):
+                  "BENCH_sim.json", "BENCH_serve.json",
+                  "GRID_grid.json", "GRID_smoke.json"):
         data = (json.dumps(replace[fname]) if fname in replace
                 else (ROOT / fname).read_text())
         (root / fname).write_text(data)
@@ -131,6 +131,61 @@ def test_check_bench_catches_engine_cell_violations(tmp_path):
                                         {"GRID_smoke.json": smoke}))
     assert proc.returncode == 1
     assert "lossless" in proc.stderr
+
+
+def test_check_bench_catches_serve_speedup_regression(tmp_path):
+    """Continuous batching falling under 1.5x sequential ingest, or
+    losing the >= 8 concurrent jobs the claim is made at, must fail."""
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["batched_vs_sequential"]["x"] = 1.1
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "1.5x" in proc.stderr
+
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["batched_vs_sequential"]["concurrent_jobs"] = 3
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "concurrent" in proc.stderr
+
+
+def test_check_bench_catches_serve_decode_drift(tmp_path):
+    """Batched and sequential modes decoding different payloads, or
+    jobs left incomplete, must fail the checker."""
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["payloads_match"] = False
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "byte-identical" in proc.stderr
+
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["serve_batched"]["completed"] = 1
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "decoded only" in proc.stderr
+
+
+def test_check_bench_smoke_serve_artifact_relaxed(tmp_path):
+    """A BENCH_serve_*.json smoke artifact is schema-checked but the
+    perf bar is skipped (config.smoke) — while a schema violation in
+    the same file still fails."""
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["config"]["smoke"] = True
+    serve["batched_vs_sequential"]["x"] = 0.5
+    root = _doctored_tree(tmp_path, {})
+    (root / "BENCH_serve_smoke.json").write_text(json.dumps(serve))
+    proc = _run_doctored(root)
+    assert proc.returncode == 0, proc.stderr
+
+    del serve["serve_sequential"]
+    (root / "BENCH_serve_smoke.json").write_text(json.dumps(serve))
+    proc = _run_doctored(root)
+    assert proc.returncode == 1
+    assert "serve_sequential" in proc.stderr
 
 
 def test_check_bench_catches_grid_missing_seed(tmp_path):

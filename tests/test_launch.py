@@ -1,10 +1,20 @@
-"""Launch layer: input specs, shape table, roofline HLO analyzer."""
+"""Launch layer: input specs, shape table, roofline HLO analyzer,
+and the serve CLI entry points (subprocess — the launch CLIs must
+never drag TPU-only import paths into a bare interpreter)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
 import jax
 import pytest
 
 from repro.configs import get_config
 from repro.launch import roofline as rl
 from repro.launch import specs as sp
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def test_shapes_table_exact():
@@ -90,6 +100,37 @@ def test_roofline_terms_bottleneck():
     assert t["compute_s"] == pytest.approx(1e15 / 197e12)
     assert rl.model_flops(1e9, 1e6, training=True) == 6e15
     assert rl.model_flops(1e9, 1e6, training=False) == 2e15
+
+
+def _run_cli(args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run([sys.executable, *args], text=True,
+                          capture_output=True, timeout=timeout,
+                          cwd=ROOT, env=env)
+
+
+@pytest.mark.parametrize("module", ["repro.launch.serve",
+                                    "repro.serve"])
+def test_serve_cli_help(module):
+    """Both serve entry points answer --help in a clean subprocess —
+    no TPU-only imports, no XLA flag side effects, exit 0."""
+    proc = _run_cli(["-m", module, "--help"], timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "--jobs" in proc.stdout and "--sequential" in proc.stdout
+
+
+def test_serve_cli_runs_tiny_trace(tmp_path):
+    """The server CLI end-to-end in a subprocess: generate a tiny
+    trace, serve it, dump the report."""
+    out = tmp_path / "report.json"
+    proc = _run_cli(["-m", "repro.launch.serve", "--jobs", "4",
+                     "--K", "4", "--L", "16", "--slots", "2",
+                     "--g-tick", "3", "--json", str(out)])
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(out.read_text())
+    assert doc["completed"] == 4 and doc["mode"] == "batched"
+    assert len(doc["completions"]) == 4
 
 
 def test_arctic_param_count_and_active_fraction():

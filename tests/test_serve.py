@@ -1,0 +1,364 @@
+"""Multi-tenant decode server: correctness under adversarial traffic.
+
+The serving contract: any interleaving of many jobs' packets — any
+per-job arrival order, duplicate/dependent rows, dropped rows
+(including enough drops to starve a job below rank K), mixed seeded +
+materialized wire formats, more jobs than slots — decodes every
+completable job bit-exactly to the same payload, at the same per-job
+completion arrival count, as an isolated per-job `StreamDecoder`.
+Scheduler ticks must never mix job state, and replaying a trace under
+ANY tick size / slot count / dispatch mode must give identical
+results (only wall-clock changes).
+
+Property-tested with hypothesis when installed, deterministic sweep
+otherwise (the container ships without it; pip install -r
+requirements-dev.txt for the full search).  The recorded fixture
+``tests/data/serve_trace.json`` pins completion arrival counts and
+payload digests against regressions.
+"""
+import pathlib
+import runpy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gf import get_field
+from repro.core.seeds import expand_rows_jit
+from repro.engine import StreamDecoder
+from repro.serve import (DecodeServer, FifoScheduler, ServeJob,
+                         ServeTrace, payload_digest,
+                         poisson_multitenant_trace, serve_trace)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DATA = pathlib.Path(__file__).resolve().parent / "data"
+S = 8
+
+
+def _sig(report):
+    """The deterministic completion signature of a served trace."""
+    return [(c.job, c.arrivals, c.payload_sha)
+            for c in report.completions]
+
+
+# ---------------------------------------------------------------------------
+# fuzzed interleavings vs the per-job StreamDecoder reference
+# ---------------------------------------------------------------------------
+
+def _fuzz_trace(n_jobs, case_seed, *, dup=0.0, drop=0.0):
+    """An adversarial hand-built trace + per-job ground truth.
+
+    Per-job K/L/wire-format are random; `dup` re-sends (dependent
+    rows), `drop` erases packets (possibly starving a job below rank
+    K); the global interleaving is a uniform shuffle.  Returns
+    ``(trace, truth P per job, (seeds, rows, C) per job)``.
+    """
+    rng = np.random.default_rng(case_seed)
+    field = get_field(S)
+    metas, per_job, truth = [], [], []
+    for j in range(n_jobs):
+        k, l = int(rng.integers(2, 7)), int(rng.integers(1, 20))
+        n = k + int(rng.integers(1, 5))
+        seeds_j = rng.integers(0, 1 << 32, n).astype(np.uint32)
+        if dup and n > 1:
+            di = rng.random(n) < dup
+            di[0] = False
+            idx = np.arange(n)
+            idx[di] -= 1
+            seeds_j = seeds_j[idx]
+        P = np.asarray(field.random_elements(
+            jax.random.PRNGKey(case_seed * 131 + j), (k, l)))
+        A = np.asarray(expand_rows_jit(seeds_j, k, S))
+        C = np.asarray(field.matmul(jnp.asarray(A), jnp.asarray(P)))
+        if drop and n > 1:
+            keep = rng.random(n) > drop
+            keep[int(rng.integers(n))] = True
+            seeds_j, A, C = seeds_j[keep], A[keep], C[keep]
+        metas.append(ServeJob(job=j, K=k, L=l,
+                              seeded=bool(rng.random() < 0.5),
+                              t_start=0.0))
+        per_job.append((seeds_j, A, C))
+        truth.append(P)
+
+    job_seq = np.repeat(np.arange(n_jobs),
+                        [len(p[0]) for p in per_job])
+    rng.shuffle(job_seq)
+    G = len(job_seq)
+    max_l = max(m.L for m in metas)
+    row_seeds = np.zeros(G, np.uint32)
+    payloads = np.zeros((G, max_l), np.uint8)
+    ptr = np.zeros(n_jobs, int)
+    for i, j in enumerate(job_seq):
+        p = ptr[j]
+        ptr[j] += 1
+        row_seeds[i] = per_job[j][0][p]
+        payloads[i, : metas[j].L] = per_job[j][2][p]
+    trace = ServeTrace(s=S, jobs=metas,
+                       times=np.arange(G, dtype=np.float64),
+                       job_of=job_seq.astype(np.int64),
+                       row_seeds=row_seeds, payloads=payloads)
+    return trace, truth, per_job
+
+
+def _serve_fuzz_case(n_jobs, slots, g_tick, case_seed, dup, drop):
+    trace, truth, per_job = _fuzz_trace(
+        n_jobs, case_seed, dup=0.3 if dup else 0.0,
+        drop=0.25 if drop else 0.0)
+    rep = serve_trace(trace, slots=slots, g_tick=g_tick, batched=True)
+    by_job = {c.job: c for c in rep.completions}
+
+    # the reference: each job decoded alone, same per-job order
+    for j, meta in enumerate(trace.jobs):
+        seeds_j, A, C = per_job[j]
+        dec = StreamDecoder(K=meta.K, L=meta.L, s=S)
+        if len(seeds_j):
+            if meta.seeded:
+                dec.ingest(jnp.asarray(seeds_j), jnp.asarray(C))
+            else:
+                dec.ingest(jnp.asarray(A), jnp.asarray(C))
+        ok, P_hat = dec.decode()
+        if j in by_job:
+            assert ok, f"job {j}: server decoded, reference did not"
+            c = by_job[j]
+            assert c.arrivals == dec.decoded_at
+            assert c.payload_sha == payload_digest(P_hat)
+            assert c.payload_sha == payload_digest(truth[j])
+        else:
+            assert not ok, (
+                f"job {j}: reference decoded, server did not")
+
+    # sequential dispatch must be byte-identical to batched
+    rep_seq = serve_trace(trace, slots=slots, g_tick=g_tick,
+                          batched=False)
+    assert _sig(rep) == _sig(rep_seq)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n_jobs=st.integers(1, 6), slots=st.integers(1, 4),
+           g_tick=st.integers(1, 6), case_seed=st.integers(0, 2**30),
+           dup=st.booleans(), drop=st.booleans())
+    def test_serve_interleaving_property(n_jobs, slots, g_tick,
+                                         case_seed, dup, drop):
+        _serve_fuzz_case(n_jobs, slots, g_tick, case_seed, dup, drop)
+else:
+    @pytest.mark.parametrize("n_jobs,slots,g_tick,case_seed,dup,drop", [
+        (1, 1, 1, 0, False, False),
+        (4, 2, 3, 1, True, False),
+        (6, 4, 2, 2, False, True),
+        (5, 3, 6, 3, True, True),
+        (6, 1, 4, 4, True, False),
+        (3, 4, 1, 5, False, True),
+        (2, 2, 5, 6, True, True),
+    ])
+    def test_serve_interleaving_cases(n_jobs, slots, g_tick,
+                                      case_seed, dup, drop):
+        """Deterministic sweep standing in when hypothesis is absent
+        (pip install -r requirements-dev.txt for the full search)."""
+        _serve_fuzz_case(n_jobs, slots, g_tick, case_seed, dup, drop)
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics + slot isolation
+# ---------------------------------------------------------------------------
+
+def test_scheduler_front_packed_fifo():
+    sched = FifoScheduler(slots=2, K=4, L=6, g_tick=2)
+    for i in range(3):
+        sched.enqueue(0, seed=i, payload=np.full(6, i, np.uint8))
+    sched.enqueue(1, seed=99, payload=np.arange(6, dtype=np.uint8),
+                  row=np.array([1, 2, 3], np.uint8))
+    assert sched.pending == 4 and sched.max_depth == 3
+    rows, seeds, use, valid, C = sched.next_block()
+    assert rows.shape == (2, 2, 4) and C.shape == (2, 2, 6)
+    # slot 0: FIFO order, both positions valid, seeded format
+    assert seeds[0].tolist() == [0, 1] and use[0].all()
+    assert valid[0].tolist() == [True, True]
+    # slot 1: one packet front-packed, materialized row zero-padded to K
+    assert valid[1].tolist() == [True, False]
+    assert not use[1, 0] and rows[1, 0].tolist() == [1, 2, 3, 0]
+    # leftover stays queued for the next tick
+    assert sched.pending == 1
+    _, seeds2, _, valid2, _ = sched.next_block()
+    assert seeds2[0, 0] == 2 and valid2.sum() == 1
+    assert sched.next_block() is None
+
+
+def test_ticks_do_not_cross_contaminate_slots():
+    """Traffic for one job must leave every other slot's basis state
+    untouched, bit for bit."""
+    k, l = 4, 8
+    field = get_field(S)
+    srv = DecodeServer(slots=3, K=k, L=l, s=S, g_tick=2)
+    for j in range(3):
+        srv.submit(j, k, l)
+    # give jobs 1 and 2 one packet each, then freeze their state
+    for j in (1, 2):
+        seeds = np.uint32([100 + j])
+        C = np.asarray(field.matmul(expand_rows_jit(seeds, k, S),
+                                    field.random_elements(
+                                        jax.random.PRNGKey(j), (k, l))))
+        srv.offer(j, C[0], seed=int(seeds[0]))
+    srv.drain()
+    frozen = [(np.asarray(srv.bank.basis(j)).copy(),
+               np.asarray(srv.bank.rank)[j]) for j in (1, 2)]
+    # now hammer job 0 to completion across several ticks
+    P0 = np.asarray(field.random_elements(jax.random.PRNGKey(9),
+                                          (k, l)))
+    seeds0 = np.arange(1, k + 2, dtype=np.uint32)
+    C0 = np.asarray(field.matmul(expand_rows_jit(seeds0, k, S),
+                                 jnp.asarray(P0)))
+    for g in range(k + 1):
+        srv.offer(0, C0[g], seed=int(seeds0[g]))
+    srv.drain()
+    assert srv.completion(0) is not None
+    np.testing.assert_array_equal(srv.result(0), P0)
+    for (B_before, r_before), j in zip(frozen, (1, 2)):
+        np.testing.assert_array_equal(
+            np.asarray(srv.bank.basis(j)), B_before)
+        assert np.asarray(srv.bank.rank)[j] == r_before
+
+
+def test_mixed_wire_formats_within_one_job():
+    """A single job may receive seeded and materialized packets
+    interchangeably (registry sibling dispatch at per-packet grain)."""
+    k, l = 5, 12
+    field = get_field(S)
+    P = np.asarray(field.random_elements(jax.random.PRNGKey(3),
+                                         (k, l)))
+    seeds = np.arange(10, 10 + k, dtype=np.uint32)
+    A = np.asarray(expand_rows_jit(seeds, k, S))
+    C = np.asarray(field.matmul(jnp.asarray(A), jnp.asarray(P)))
+    srv = DecodeServer(slots=1, K=k, L=l, s=S, g_tick=3)
+    srv.submit(0, k, l)
+    for g in range(k):
+        if g % 2:
+            srv.offer(0, C[g], seed=int(seeds[g]))        # seeded
+        else:
+            srv.offer(0, C[g], row=A[g])                   # materialized
+    srv.drain()
+    c = srv.completion(0)
+    assert c is not None and c.arrivals == k
+    np.testing.assert_array_equal(srv.result(0), P)
+
+
+def test_late_packets_dropped_and_slot_reused():
+    """Packets after rank K are dropped; the freed slot admits the
+    next waiting job (more jobs than slots)."""
+    k, l = 3, 4
+    field = get_field(S)
+    srv = DecodeServer(slots=1, K=k, L=l, s=S, g_tick=2)
+    mats = []
+    for j in range(3):
+        seeds = (np.arange(k + 2) + 50 * (j + 1)).astype(np.uint32)
+        P = np.asarray(field.random_elements(jax.random.PRNGKey(20 + j),
+                                             (k, l)))
+        C = np.asarray(field.matmul(expand_rows_jit(seeds, k, S),
+                                    jnp.asarray(P)))
+        mats.append((seeds, C, P))
+        srv.submit(j, k, l)
+    assert srv.max_concurrent == 1
+    for j, (seeds, C, _) in enumerate(mats):
+        for g in range(k + 2):                 # 2 redundant packets
+            srv.offer(j, C[g], seed=int(seeds[g]))
+        srv.drain()
+    for j, (_, _, P) in enumerate(mats):
+        assert srv.completion(j) is not None
+        np.testing.assert_array_equal(srv.result(j), P)
+    assert srv.max_concurrent == 1             # never two slots live
+    assert srv.late_dropped > 0                # redundant tail dropped
+    c = srv.completions[0]
+    assert srv.offer(0, mats[0][1][0], seed=int(mats[0][0][0])) is False
+    assert srv.completions[0] == c             # completion unchanged
+
+
+# ---------------------------------------------------------------------------
+# determinism: same trace => same results, whatever the batching
+# ---------------------------------------------------------------------------
+
+def test_serving_recorded_trace_twice_is_identical():
+    trace = poisson_multitenant_trace(8, K=6, L=24, extra_packets=4,
+                                      duplicate_rate=0.1, seed=21)
+    a = serve_trace(trace, slots=4, g_tick=4)
+    b = serve_trace(trace, slots=4, g_tick=4)
+    assert _sig(a) == _sig(b)
+    assert a.packets_ingested == b.packets_ingested
+    assert a.ticks == b.ticks and a.dispatches == b.dispatches
+
+
+def test_completion_invariant_to_tick_batching():
+    """g_tick / slots / dispatch mode only change wall clock — decoded
+    payloads and completion arrival counts are invariant."""
+    trace = poisson_multitenant_trace(
+        6, K=[3, 4, 5, 3, 4, 5], L=[8, 10, 6, 8, 10, 6],
+        extra_packets=3, duplicate_rate=0.15, seed=5)
+    ref = None
+    for slots, g_tick, batched in [(2, 1, True), (3, 4, True),
+                                   (6, 8, True), (4, 2, False),
+                                   (6, 1, False)]:
+        rep = serve_trace(trace, slots=slots, g_tick=g_tick,
+                          batched=batched)
+        assert rep.completed == 6
+        sig = _sig(rep)
+        assert ref is None or sig == ref, (slots, g_tick, batched)
+        ref = sig
+
+
+def test_trace_json_roundtrip_serves_identically(tmp_path):
+    trace = poisson_multitenant_trace(5, K=4, L=16, extra_packets=3,
+                                      seed=13)
+    path = tmp_path / "trace.json"
+    trace.save(path)
+    loaded = ServeTrace.load(path)
+    assert _sig(serve_trace(trace)) == _sig(serve_trace(loaded))
+
+
+def test_regression_fixture_trace():
+    """The committed fixture decodes to its recorded completion
+    signature — any drift in seeds, scheduler, bank, or field
+    arithmetic shows up here."""
+    trace = ServeTrace.load(DATA / "serve_trace.json")
+    expected = trace.extra["expected"]
+    for g_tick in (1, 4, 8):
+        rep = serve_trace(trace, slots=4, g_tick=g_tick)
+        assert rep.completed == len(expected)
+        for c in rep.completions:
+            e = expected[str(c.job)]
+            assert c.arrivals == e["arrivals"], f"job {c.job}"
+            assert c.payload_sha == e["payload_sha"], f"job {c.job}"
+
+
+# ---------------------------------------------------------------------------
+# the example (fast-tier smoke, same pattern as seeded_overhead)
+# ---------------------------------------------------------------------------
+
+def test_serve_example_runs():
+    mod = runpy.run_path(str(ROOT / "examples" / "serve_decode.py"))
+    stats = mod["main"]()
+    assert stats["completed"] == stats["jobs"]
+    assert stats["dispatches_batched"] < stats["dispatches_sequential"]
+
+
+def test_fixture_matches_generator():
+    """The fixture is the documented generator call, frozen — keep the
+    provenance honest so it can be regenerated knowingly."""
+    gen = trace_from_fixture_params()
+    fix = ServeTrace.load(DATA / "serve_trace.json")
+    assert [j for j in gen.jobs] == [j for j in fix.jobs]
+    np.testing.assert_array_equal(gen.row_seeds, fix.row_seeds)
+    np.testing.assert_array_equal(gen.payloads, fix.payloads)
+
+
+def trace_from_fixture_params() -> ServeTrace:
+    """Exact generator call behind tests/data/serve_trace.json."""
+    return poisson_multitenant_trace(
+        6, K=[3, 5, 4, 6, 3, 5], L=[8, 16, 12, 20, 8, 16],
+        extra_packets=3, seeded="mixed", duplicate_rate=0.2, seed=42)
