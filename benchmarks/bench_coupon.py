@@ -1,10 +1,9 @@
 """Paper Prop. 1: blind-box draws E[G] — FedAvg K·H(K) vs FedNC ~K."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
+from repro import obs
 from repro.core import coupon
 
 from .common import emit
@@ -12,9 +11,9 @@ from .common import emit
 
 def run(trials: int = 200) -> None:
     for K in (10, 20, 50):
-        t0 = time.perf_counter()
-        sim = float(np.mean(coupon.simulate_fedavg_draws(K, trials)))
-        us = (time.perf_counter() - t0) * 1e6
+        with obs.timed("bench.coupon", cat="bench", K=K) as sw:
+            sim = float(np.mean(coupon.simulate_fedavg_draws(K, trials)))
+        us = sw.dur_s * 1e6
         exact = coupon.expected_draws_fedavg(K)
         asym = coupon.expected_draws_fedavg_asymptotic(K)
         nc = coupon.expected_draws_fednc(K, s=8)

@@ -5,8 +5,7 @@ against the Prop.-2 bound 1-(1-2^-s)^η and the paper's reported
 numbers (0.5 / 0.0625 / 0.0039 / 0.3239)."""
 from __future__ import annotations
 
-import time
-
+from repro import obs
 from repro.core import security
 
 from .common import emit
@@ -18,15 +17,17 @@ PAPER = {(1, 1): 0.5, (4, 1): 0.0625, (8, 1): 0.0039, (8, 100): 0.3239}
 def run(trials: int = 120, K: int = 10) -> None:
     for s, eta in SETTINGS:
         bound = security.error_probability_bound(s, eta)
-        t0 = time.perf_counter()
-        if eta <= 1:
-            rate = security.simulate_error_probability(
-                K=K, s=s, eta=eta, trials=trials, seed=0)
-        else:
-            # η=100 hops: fewer trials, each trial is 100 recodes
-            rate = security.simulate_error_probability(
-                K=K, s=s, eta=eta, trials=max(20, trials // 5), seed=0)
-        us = (time.perf_counter() - t0) * 1e6
+        with obs.timed("bench.error_prob", cat="bench",
+                       s=s, eta=eta) as sw:
+            if eta <= 1:
+                rate = security.simulate_error_probability(
+                    K=K, s=s, eta=eta, trials=trials, seed=0)
+            else:
+                # η=100 hops: fewer trials, each trial is 100 recodes
+                rate = security.simulate_error_probability(
+                    K=K, s=s, eta=eta, trials=max(20, trials // 5),
+                    seed=0)
+        us = sw.dur_s * 1e6
         emit(f"error_prob_s{s}_eta{eta}", us,
              f"sim={rate:.4f};bound={bound:.4f};paper={PAPER[(s, eta)]}")
 

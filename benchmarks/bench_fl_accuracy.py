@@ -6,11 +6,11 @@ effects (FedNC ≈ FedAvg iid; FedNC > FedAvg non-iid) is what the paper
 claims; examples/paper_experiments.py runs the larger version."""
 from __future__ import annotations
 
-import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.channel import BlindBoxChannel
 from repro.core.fednc import FedNCConfig
 from repro.data import (iid_partition, make_image_dataset,
@@ -55,11 +55,11 @@ def run(rounds: int = 6, seeds: tuple = (0, 1, 2)) -> None:
     for split in ("iid", "noniid"):
         accs = {}
         for scheme in ("fedavg", "fednc"):
-            t0 = time.perf_counter()
-            vals = [_run(split, scheme, rounds=rounds, seed=s)
-                    for s in seeds]
-            accs[scheme] = float(np.mean(vals))
-            us = (time.perf_counter() - t0) * 1e6 / len(seeds)
+            with obs.timed("bench.fl_accuracy", cat="bench") as sw:
+                vals = [_run(split, scheme, rounds=rounds, seed=s)
+                        for s in seeds]
+                accs[scheme] = float(np.mean(vals))
+            us = sw.dur_s * 1e6 / len(seeds)
             emit(f"fl_acc_{split}_{scheme}", us,
                  f"acc={accs[scheme]:.3f};rounds={rounds};"
                  f"seeds={len(seeds)}")

@@ -2,10 +2,9 @@
 FedNC (K + extra coded tuples) vs FedAvg (each packet irreplaceable)."""
 from __future__ import annotations
 
-import time
-
 import jax
 
+from repro import obs
 from repro.core import fednc
 from repro.core.channel import ErasureChannel
 from repro.core.fednc import FedNCConfig
@@ -22,21 +21,23 @@ def run(trials: int = 30) -> None:
     prev = clients[0]
     for p_erase in (0.0, 0.1, 0.3):
         for extra in (0, 4):
-            t0 = time.perf_counter()
             ok_nc = 0
             ok_avg = 0
-            for t in range(trials):
-                chan = ErasureChannel(p_erase, seed=t)
-                cfg = FedNCConfig(s=8, extra_tuples=extra)
-                r = fednc.fednc_round(clients, weights, prev, cfg,
-                                      jax.random.PRNGKey(t), channel=chan)
-                ok_nc += int(r.decoded)
-                chan2 = ErasureChannel(p_erase, seed=t)
-                r2 = fednc.fedavg_round(clients, weights, prev,
-                                        channel=chan2)
-                # FedAvg "success" = heard from every client
-                ok_avg += int(r2.report.delivered == K)
-            us = (time.perf_counter() - t0) * 1e6
+            with obs.timed("bench.robustness", cat="bench") as sw:
+                for t in range(trials):
+                    chan = ErasureChannel(p_erase, seed=t)
+                    cfg = FedNCConfig(s=8, extra_tuples=extra)
+                    r = fednc.fednc_round(clients, weights, prev, cfg,
+                                          jax.random.PRNGKey(t),
+                                          channel=chan)
+                    ok_nc += int(r.decoded)
+                    chan2 = ErasureChannel(p_erase, seed=t)
+                    r2 = fednc.fedavg_round(clients, weights, prev,
+                                            channel=chan2)
+                    # FedAvg "success" = heard from every client
+                    ok_avg += int(r2.report.delivered == K)
+                sw.fence(getattr(r, "global_params", None))
+            us = sw.dur_s * 1e6
             emit(f"robust_p{p_erase}_extra{extra}", us,
                  f"fednc_decode={ok_nc / trials:.2f};"
                  f"fedavg_full={ok_avg / trials:.2f}")

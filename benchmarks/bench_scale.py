@@ -3,10 +3,10 @@ rate 0.1 -> 0.05).  FedNC's advantage grows as participation drops —
 CI-scale reproduction with the synthetic image task."""
 from __future__ import annotations
 
-import time
 
 import jax
 
+from repro import obs
 from repro.core.channel import BlindBoxChannel
 from repro.core.fednc import FedNCConfig
 from repro.data import make_image_dataset, mixed_noniid_partition
@@ -45,10 +45,11 @@ def run(rounds: int = 5, seeds: tuple = (0, 1)) -> None:
     for N in (40, 80):          # scaled-down analogue of 100 -> 200
         accs = {}
         for scheme in ("fedavg", "fednc"):
-            t0 = time.perf_counter()
-            vals = [_run(N, scheme, rounds=rounds, seed=s) for s in seeds]
-            accs[scheme] = float(np.mean(vals))
-            us = (time.perf_counter() - t0) * 1e6 / len(seeds)
+            with obs.timed("bench.scale", cat="bench") as sw:
+                vals = [_run(N, scheme, rounds=rounds, seed=s)
+                        for s in seeds]
+                accs[scheme] = float(np.mean(vals))
+            us = sw.dur_s * 1e6 / len(seeds)
             emit(f"scale_N{N}_{scheme}", us,
                  f"acc={accs[scheme]:.3f};seeds={len(seeds)}")
         emit(f"scale_N{N}_delta", 0.0,

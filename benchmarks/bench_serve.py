@@ -19,8 +19,14 @@ Writes ``BENCH_serve.json``:
   x ≥ 1.5 with ≥ 8 concurrent jobs.
 * ``payloads_match`` — both modes decoded byte-identical payloads at
   identical completion arrival counts (checked every replay).
+* ``metrics`` — the batched server's ``fednc-metrics-v1`` snapshot
+  (queue-depth gauge, ingest-batch and job-latency histograms).
 
-    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+``--trace [PATH]`` additionally replays the batched mode once under an
+enabled tracer and writes the Chrome trace (default
+``TRACE_serve.json``; summarize with ``python -m repro.obs``).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--trace]
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import argparse
 import json
 import pathlib
 
+from repro import obs
 from repro.serve import poisson_multitenant_trace, serve_trace
 
 from .common import emit
@@ -67,11 +74,12 @@ def _serve_stats(trace, *, slots, g_tick, batched, reps):
         "wall_s": best.wall_s, "packets_per_s": best.packets_per_s,
         "p50_latency_s": p50, "p99_latency_s": p99,
     }
-    return entry, sig
+    return entry, sig, best.metrics
 
 
 def run(fast: bool = False, smoke: bool = False,
-        json_path: str = "BENCH_serve.json") -> dict:
+        json_path: str = "BENCH_serve.json",
+        trace_path: str | None = None) -> dict:
     if smoke:
         jobs, k, l = SMOKE["jobs"], SMOKE["K"], SMOKE["L"]
         slots, g_tick = SMOKE["slots"], SMOKE["g_tick"]
@@ -89,10 +97,10 @@ def run(fast: bool = False, smoke: bool = False,
     serve_trace(trace, slots=slots, g_tick=g_tick, batched=True)
     serve_trace(trace, slots=slots, g_tick=g_tick, batched=False)
 
-    bat, sig_b = _serve_stats(trace, slots=slots, g_tick=g_tick,
-                              batched=True, reps=reps)
-    seq, sig_s = _serve_stats(trace, slots=slots, g_tick=g_tick,
-                              batched=False, reps=reps)
+    bat, sig_b, bat_metrics = _serve_stats(
+        trace, slots=slots, g_tick=g_tick, batched=True, reps=reps)
+    seq, sig_s, _ = _serve_stats(
+        trace, slots=slots, g_tick=g_tick, batched=False, reps=reps)
 
     x = bat["packets_per_s"] / seq["packets_per_s"]
     results = {
@@ -110,7 +118,21 @@ def run(fast: bool = False, smoke: bool = False,
             "x": x, "concurrent_jobs": bat["max_concurrent"],
         },
         "payloads_match": sig_b == sig_s,
+        "metrics": bat_metrics,
     }
+
+    if trace_path:
+        # one extra traced batched replay — the timed replays above ran
+        # with tracing off, so the published numbers are untraced
+        tr = obs.set_tracer(obs.Tracer(process_name="bench_serve"))
+        try:
+            serve_trace(trace, slots=slots, g_tick=g_tick,
+                        batched=True)
+        finally:
+            obs.set_tracer(obs.NULL_TRACER)
+        obs.save_events(tr.events, trace_path)
+        emit("serve_trace_events", 0.0,
+             f"events={len(tr.events)};path={trace_path}")
 
     for entry in (bat, seq):
         emit(f"serve_{entry['mode']}", entry["wall_s"] * 1e6,
@@ -133,11 +155,15 @@ def main() -> None:
                     help="tiny trace, bar relaxed (CI smoke artifact)")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--trace", nargs="?", const="TRACE_serve.json",
+                    default=None, metavar="PATH",
+                    help="write a Chrome trace of one batched replay")
     args = ap.parse_args()
     path = args.json or ("BENCH_serve_smoke.json" if args.smoke
                          else "BENCH_serve.json")
     print("name,us_per_call,derived")
-    run(fast=args.fast, smoke=args.smoke, json_path=path)
+    run(fast=args.fast, smoke=args.smoke, json_path=path,
+        trace_path=args.trace)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,8 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
+from repro import obs
 from repro.core import coupon
 from repro.sim import (STRAGGLER_PROFILES, NetworkSimulator,
                        PopulationConfig, SimConfig)
@@ -43,10 +43,9 @@ def _run_scenario(pop: int, straggler: str, rounds: int, seed: int,
         population=PopulationConfig(n_clients=pop, **pop_kw),
         clients_per_round=K, s=S,
         gap=STRAGGLER_PROFILES[straggler], seed=seed)
-    t0 = time.perf_counter()
-    trace = NetworkSimulator(cfg).run(rounds)
-    wall = time.perf_counter() - t0
-    return trace.summary(), wall
+    with obs.timed("bench.sim", cat="bench", pop=pop) as sw:
+        trace = NetworkSimulator(cfg).run(rounds)
+    return trace.summary(), sw.dur_s
 
 
 def run(rounds: int = 100, json_path: str = "BENCH_sim.json") -> dict:

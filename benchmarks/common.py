@@ -1,17 +1,27 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+Timing goes through ``repro.obs.timed`` (the repo-wide stopwatch) and
+every measured call is fenced with ``obs.device_sync`` before the
+clock stops — JAX dispatches asynchronously, so an unfenced loop times
+the Python dispatch, not the device work.
+"""
 from __future__ import annotations
 
-import time
 from typing import Callable
+
+from repro import obs
 
 
 def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    out = None
     for _ in range(warmup):
-        fn(*args)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn(*args)
-    return (time.perf_counter() - t0) / iters * 1e6
+        out = fn(*args)
+    obs.device_sync(out)          # warmup work must not leak into timing
+    with obs.timed("bench.time_us", cat="bench", iters=iters) as sw:
+        for _ in range(iters):
+            out = fn(*args)
+        sw.fence(out)
+    return sw.dur_s / iters * 1e6
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

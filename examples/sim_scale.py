@@ -14,8 +14,8 @@ ratio against the K·H(K)/K prediction from `core.coupon`.
 from __future__ import annotations
 
 import argparse
-import time
 
+from repro import obs
 from repro.core import coupon
 from repro.sim import (STRAGGLER_PROFILES, NetworkSimulator,
                        PopulationConfig, SimConfig)
@@ -52,9 +52,9 @@ def main() -> None:
             gap=STRAGGLER_PROFILES[args.straggler],
             timeout=1e4 if args.dropout else float("inf"),
             seed=args.seed)
-        t0 = time.perf_counter()
-        trace = NetworkSimulator(cfg).run(args.rounds)
-        wall = time.perf_counter() - t0
+        with obs.timed("sim.scale", cat="sim", pop=pop) as sw:
+            trace = NetworkSimulator(cfg).run(args.rounds)
+        wall = sw.dur_s
         s = trace.summary()
         if "draw_ratio" not in s:    # dropout blocked every FedAvg round
             print(f"{pop:>10,} fednc_decode_rate="

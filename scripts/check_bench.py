@@ -28,7 +28,15 @@ exist and carry the delay-reordered sweep (FedAvg inflation beyond
 K·H(K) above its bar) and the compute-coupling section (coupled decode
 clock strictly dominating the network-only schedule); any other
 ``GRID_*.json`` in the root (e.g. the CI smoke artifact) is
-schema-checked too — axes, per-scenario seed, draw-ratio fields.
+schema-checked too — axes, per-scenario seed, draw-ratio fields, and
+the per-scenario ``per_stage`` wall breakdown from ``repro.obs``.
+
+Observability artifacts ride the same gate: ``BENCH_serve*.json``
+must embed a valid ``fednc-metrics-v1`` snapshot (queue-depth gauge,
+ingest-batch + job-latency histograms), and any ``TRACE_*.json`` in
+the root must be valid Chrome trace-event JSON (schema
+``fednc-trace-v1``).  The rules are restated here standalone — this
+script must keep running without ``repro`` importable.
 
 Exit code 0 = artifacts present, well-formed, bars met.
 """
@@ -191,6 +199,109 @@ def check_sim(name: str, data: dict) -> list[str]:
     return errors
 
 
+#: schema tags written by repro.obs — validated here WITHOUT importing
+#: repro (tests/test_bench.py runs this checker standalone, no
+#: PYTHONPATH), so the rules are restated rather than shared
+METRICS_SCHEMA = "fednc-metrics-v1"
+TRACE_SCHEMA = "fednc-trace-v1"
+
+
+def _check_number(name: str, key: str, field: str, v, errors,
+                  allow_none: bool = False) -> bool:
+    if v is None and allow_none:
+        return True
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        errors.append(f"{name}: {key} field {field!r} is not a number: "
+                      f"{v!r}")
+        return False
+    return True
+
+
+def check_metrics_doc(name: str, doc, key: str = "metrics",
+                      require: tuple = ()) -> list[str]:
+    """Validate one ``fednc-metrics-v1`` snapshot (repro.obs.metrics)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict) or doc.get("schema") != METRICS_SCHEMA:
+        return [f"{name}: {key} schema "
+                f"{doc.get('schema') if isinstance(doc, dict) else doc!r}"
+                f" != {METRICS_SCHEMA!r}"]
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        return [f"{name}: {key} missing the 'metrics' mapping"]
+    for req, kind in require:
+        if metrics.get(req, {}).get("type") != kind:
+            errors.append(f"{name}: {key} missing required {kind} "
+                          f"{req!r}")
+    for mname, m in metrics.items():
+        mk = f"{key}[{mname}]"
+        t = m.get("type") if isinstance(m, dict) else None
+        if t == "counter":
+            _check_number(name, mk, "value", m.get("value"), errors)
+        elif t == "gauge":
+            if _require(name, m, mk, ("last", "min", "max", "sum",
+                                      "count"), errors):
+                for f in ("last", "min", "max"):
+                    _check_number(name, mk, f, m[f], errors,
+                                  allow_none=True)
+        elif t == "histogram":
+            if not _require(name, m, mk, ("bounds", "counts", "count",
+                                          "sum", "min", "max"), errors):
+                continue
+            bounds, counts = m["bounds"], m["counts"]
+            if any(b >= a for b, a in zip(bounds, bounds[1:])) \
+                    or not bounds:
+                errors.append(f"{name}: {mk} bounds are not strictly "
+                              "ascending")
+            if len(counts) != len(bounds) + 1:
+                errors.append(f"{name}: {mk} has {len(counts)} counts "
+                              f"for {len(bounds)} bounds (want "
+                              "len(bounds)+1, overflow bucket last)")
+            elif sum(counts) != m["count"]:
+                errors.append(f"{name}: {mk} count {m['count']} != "
+                              f"sum(counts) {sum(counts)}")
+        else:
+            errors.append(f"{name}: {mk} has unknown metric type {t!r}")
+    return errors
+
+
+def check_trace(name: str, data) -> list[str]:
+    """Validate a Chrome trace-event document (repro.obs.trace)."""
+    errors: list[str] = []
+    if not isinstance(data, dict):
+        return [f"{name}: trace document is not an object"]
+    if data.get("otherData", {}).get("schema") != TRACE_SCHEMA:
+        errors.append(f"{name}: otherData.schema != {TRACE_SCHEMA!r}")
+    events = data.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return errors + [f"{name}: traceEvents missing or empty"]
+    for i, ev in enumerate(events):
+        key = f"traceEvents[{i}]"
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            errors.append(f"{name}: {key} missing 'ph'/'name'")
+            continue
+        if ev["ph"] == "M":      # metadata carries no timestamp
+            continue
+        for f in ("ts", "pid", "tid"):
+            if f not in ev:
+                errors.append(f"{name}: {key} ({ev['ph']!r} "
+                              f"{ev['name']!r}) missing {f!r}")
+            else:
+                _check_number(name, key, f, ev[f], errors)
+        if ev["ph"] == "X":
+            if not _check_number(name, key, "dur", ev.get("dur"),
+                                 errors) or ev["dur"] < 0:
+                errors.append(f"{name}: {key} complete event has bad "
+                              f"dur {ev.get('dur')!r}")
+        elif ev["ph"] == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float))
+                    and not isinstance(v, bool) for v in args.values()):
+                errors.append(f"{name}: {key} counter event needs "
+                              "non-empty numeric args")
+    return errors
+
+
 SERVE_MODES = ("serve_batched", "serve_sequential")
 SERVE_ENTRY_FIELDS = (
     "mode", "jobs", "completed", "packets", "ticks", "dispatches",
@@ -224,6 +335,11 @@ def check_serve(name: str, data: dict) -> list[str]:
     if data.get("payloads_match") is not True:
         errors.append(f"{name}: batched and sequential decodes are "
                       "not byte-identical (payloads_match != true)")
+    errors += check_metrics_doc(
+        name, data.get("metrics"), require=(
+            ("serve.queue_depth", "gauge"),
+            ("serve.ingest_batch", "histogram"),
+            ("serve.job_latency_s", "histogram")))
     ratio = data.get("batched_vs_sequential")
     if ratio is None:
         return errors + [f"{name}: missing 'batched_vs_sequential'"]
@@ -271,10 +387,20 @@ def check_grid(name: str, data: dict) -> list[str]:
         return errors + [f"{name}: no scenarios"]
     for key, entry in scenarios.items():
         if not _require(name, entry, key, ("seed", "axes", "rounds",
-                                           "wall_s"), errors):
+                                           "wall_s", "per_stage"),
+                        errors):
             continue
         if not isinstance(entry["seed"], int):
             errors.append(f"{name}: {key} seed is not an int")
+        # per-stage wall breakdown from the scenario-local tracer:
+        # {stage name -> seconds}, never empty (every strategy emits
+        # at least one leaf span)
+        stages = entry["per_stage"]
+        if not isinstance(stages, dict) or not stages or not all(
+                isinstance(v, (int, float)) and not isinstance(v, bool)
+                for v in stages.values()):
+            errors.append(f"{name}: {key} per_stage is not a non-empty "
+                          "{stage: seconds} mapping")
         ax = entry["axes"]
         missing = [a for a in GRID_AXES if a not in ax]
         if missing:
@@ -360,6 +486,10 @@ def main() -> int:
     checks.update({p.name: check_serve
                    for p in sorted(ROOT.glob("BENCH_serve_*.json"))
                    if p.name not in CHECKS})
+    # Chrome traces (bench_serve --trace, repro.grid --trace) are
+    # optional artifacts but must be valid trace-event JSON when present
+    checks.update({p.name: check_trace
+                   for p in sorted(ROOT.glob("TRACE_*.json"))})
     for fname, check in checks.items():
         path = ROOT / fname
         if not path.exists():

@@ -1,8 +1,10 @@
 """Build the §Dry-run and §Roofline tables of EXPERIMENTS.md from
-EXPERIMENTS/dryrun_results.json, or render a scenario-grid artifact:
+EXPERIMENTS/dryrun_results.json, or render a scenario-grid or
+observability artifact:
 
     PYTHONPATH=src python scripts/make_report.py
     PYTHONPATH=src python scripts/make_report.py --grid GRID_grid.json
+    PYTHONPATH=src python scripts/make_report.py --obs TRACE_serve.json
 """
 from __future__ import annotations
 
@@ -148,9 +150,25 @@ def grid_report(path: str = "GRID_grid.json") -> None:
         print(markdown_report(json.load(f)), end="")
 
 
+def obs_report(*paths: str) -> None:
+    """§Obs: per-stage / counter summary of Chrome traces (same
+    renderer as ``python -m repro.obs``)."""
+    from repro.obs import load_trace, markdown_summary, merge_events, \
+        summarize
+    events = []
+    for p in paths or ("TRACE_serve.json",):
+        events.extend(load_trace(p))
+    print(markdown_summary(summarize(merge_events(events)),
+                           title=", ".join(paths or ("TRACE_serve.json",))))
+
+
 if __name__ == "__main__":
     if "--grid" in sys.argv:
         i = sys.argv.index("--grid")
         grid_report(*sys.argv[i + 1:i + 2])
+        sys.exit(0)
+    if "--obs" in sys.argv:
+        i = sys.argv.index("--obs")
+        obs_report(*sys.argv[i + 1:])
         sys.exit(0)
     main(*sys.argv[1:])

@@ -44,6 +44,7 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import packets as pkt
 from repro.core import seeds as seedlib
 from repro.core.channel import ChannelReport, RowGather, RowMix
@@ -113,9 +114,15 @@ class CodingEngine:
             self._mat_kernel = self._kernel
         self.field = get_field(config.s)
         self._dispatch: dict[bool, tuple] = {}   # built lazily, once
-        # L-sized kernel dispatches issued so far (monotonic; benchmarks
-        # diff it around a round to count dispatches per round)
-        self.dispatch_count = 0
+        # per-engine metrics; engine.dispatches counts L-sized kernel
+        # dispatches (monotonic; benchmarks diff it around a round)
+        self.metrics = obs.MetricsRegistry()
+        self._dispatches = self.metrics.counter("engine.dispatches")
+
+    @property
+    def dispatch_count(self) -> int:
+        """L-sized kernel dispatches issued so far (monotonic)."""
+        return self._dispatches.value
 
     # -- packetization ----------------------------------------------------
 
@@ -201,17 +208,22 @@ class CodingEngine:
             return max(L, 1), 1
         return cl, -(-L // cl)
 
-    def matmul(self, A: jnp.ndarray, P: jnp.ndarray) -> jnp.ndarray:
+    def matmul(self, A: jnp.ndarray, P: jnp.ndarray, *,
+               stage: str = "encode") -> jnp.ndarray:
         """C = A·P, chunk-streamed through the configured kernel.
 
         Chunks are dispatched eagerly (JAX async dispatch), so chunk
         i+1 is enqueued while chunk i still executes on-device.  On a
         seeded engine, pass the (n,) uint32 seed vector as `A` to run
         the seeded encode kernel (rows regenerated in-kernel).
+        `stage` labels the per-chunk trace spans (``engine.<stage>``)
+        when tracing is enabled.
         """
-        return self._stream(A, P, enc_seeded=_is_seed_rows(A))
+        return self._stream(A, P, enc_seeded=_is_seed_rows(A),
+                            stage=stage)
 
-    def _stream(self, A, P, A_post=None, *, enc_seeded: bool = False):
+    def _stream(self, A, P, A_post=None, *, enc_seeded: bool = False,
+                stage: str = "encode", post_stage: str = "decode"):
         """Run the kernel chunk-by-chunk over the lane dim of P.
 
         With `A_post` (the decode mixing matrix), each chunk is pushed
@@ -238,23 +250,33 @@ class CodingEngine:
         if L == 0:
             return jnp.zeros((n_out, 0), jnp.uint8)
 
-        def mm(kernel, M, X):
-            self.dispatch_count += 1
-            return kernel(M, X, s=s) if shards == 1 else kernel(M, X)
+        tr = obs.get_tracer()
+
+        def mm(kernel, M, X, label, chunk):
+            self._dispatches.inc()
+            if not tr.enabled:
+                return kernel(M, X, s=s) if shards == 1 \
+                    else kernel(M, X)
+            # traced: fence the chunk so the span measures device time
+            # (the untraced path above keeps async-dispatch pipelining)
+            with tr.span(f"engine.{label}", cat="engine",
+                         chunk=chunk) as sp:
+                return sp.fence(kernel(M, X, s=s) if shards == 1
+                                else kernel(M, X))
 
         cl, nc = self._chunks(L)
         cl += (-cl) % shards            # lane-shardable chunk width
         if nc == 1 and cl == L:
-            out = mm(enc_kernel, A, P)
-            return mm(post_kernel, A_post, out) \
+            out = mm(enc_kernel, A, P, stage, 0)
+            return mm(post_kernel, A_post, out, post_stage, 0) \
                 if A_post is not None else out
         Lp = cl * nc
         Pp = jnp.pad(P, ((0, 0), (0, Lp - L))) if Lp != L else P
         outs = []
         for c in range(nc):
             block = jax.lax.dynamic_slice_in_dim(Pp, c * cl, cl, axis=1)
-            enc = mm(enc_kernel, A, block)
-            outs.append(mm(post_kernel, A_post, enc)
+            enc = mm(enc_kernel, A, block, stage, c)
+            outs.append(mm(post_kernel, A_post, enc, post_stage, c)
                         if A_post is not None else enc)
         return jnp.concatenate(outs, axis=1)[:, :L]
 
@@ -341,14 +363,17 @@ class CodingEngine:
         R = jnp.asarray(R, jnp.uint8)
         if isinstance(batch, SeededBatch):
             batch = batch.expand(self.config.s)
-        return EncodedBatch(A=self.matmul(R, batch.A),
-                            C=self.matmul(R, batch.C))
+        return EncodedBatch(A=self.matmul(R, batch.A, stage="recode"),
+                            C=self.matmul(R, batch.C, stage="recode"))
 
     def select(self, batch) -> tuple[jnp.ndarray, EncodedBatch]:
         """Pick K independent tuples out of n >= K, fully on-device."""
         if isinstance(batch, SeededBatch):
             batch = batch.expand(self.config.s)
-        ok, idx, _ = incremental_select(batch.A, self.config.s)
+        with obs.get_tracer().span("engine.select", cat="engine",
+                                   n=int(batch.n)) as sp:
+            ok, idx, _ = incremental_select(batch.A, self.config.s)
+            sp.fence(idx)
         return ok, EncodedBatch(A=batch.A[idx], C=batch.C[idx])
 
     def decode(self, batch) -> tuple[bool, Optional[jnp.ndarray]]:
@@ -377,10 +402,13 @@ class CodingEngine:
         ok = jnp.bool_(True)
         if batch.n > K:
             ok, batch = self.select(batch)
-        ok_inv, A_inv = invert(self.field, batch.A)
+        with obs.get_tracer().span("engine.invert", cat="engine",
+                                   K=K) as sp:
+            ok_inv, A_inv = invert(self.field, batch.A)
+            sp.fence(A_inv)
         if not bool(ok & ok_inv):
             return False, None
-        return True, self.matmul(A_inv, batch.C)
+        return True, self.matmul(A_inv, batch.C, stage="decode")
 
     # -- fused round internals --------------------------------------------
 
@@ -396,15 +424,20 @@ class CodingEngine:
         n, K = A.shape
         if n < K:
             return EngineRound(False, None, None)
+        tr = obs.get_tracer()
         ok = jnp.bool_(True)
         if n > K:
-            ok, idx, _ = incremental_select(A, self.config.s)
+            with tr.span("engine.select", cat="engine", n=n) as sp:
+                ok, idx, _ = incremental_select(A, self.config.s)
+                sp.fence(idx)
             A_sel = A[idx]
             enc = seeds[idx] if seeds is not None else A_sel
         else:
             A_sel = A
             enc = seeds if seeds is not None else A
-        ok_inv, A_inv = invert(self.field, A_sel)
+        with tr.span("engine.invert", cat="engine", K=K) as sp:
+            ok_inv, A_inv = invert(self.field, A_sel)
+            sp.fence(A_inv)
         if not bool(ok & ok_inv):
             return EngineRound(False, None, None)
         # encode only the selected rows — the ideal channel delivers
@@ -432,25 +465,32 @@ class CodingEngine:
         """
         n, K = A.shape
         s = self.config.s
-        plan = channel.plan_transform(n, s)
-        if isinstance(plan, RowGather):
-            delivered = int(len(plan.idx))
-            if delivered < K:
-                return EngineRound(False, None,
-                                   ChannelReport(n, delivered, False))
-            idx = jnp.asarray(plan.idx, jnp.int32)
-            A_rx = A[idx]
-        elif isinstance(plan, RowMix):
-            delivered = int(plan.R.shape[0])
-            A_rx = self.field.matmul(plan.R, A)
-        else:
-            raise TypeError(
-                f"unsupported channel plan {type(plan).__name__}")
-        ok, sel, _ = incremental_select(A_rx, s)
+        tr = obs.get_tracer()
+        with tr.span("engine.transform", cat="engine", n=n) as sp:
+            plan = channel.plan_transform(n, s)
+            if isinstance(plan, RowGather):
+                delivered = int(len(plan.idx))
+                if delivered < K:
+                    return EngineRound(
+                        False, None, ChannelReport(n, delivered, False))
+                idx = jnp.asarray(plan.idx, jnp.int32)
+                A_rx = A[idx]
+            elif isinstance(plan, RowMix):
+                delivered = int(plan.R.shape[0])
+                A_rx = self.field.matmul(plan.R, A)
+            else:
+                raise TypeError(
+                    f"unsupported channel plan {type(plan).__name__}")
+            sp.fence(A_rx)
+        with tr.span("engine.select", cat="engine", n=delivered) as sp:
+            ok, sel, _ = incremental_select(A_rx, s)
+            sp.fence(sel)
         report = ChannelReport(n, delivered, bool(ok))
         if not bool(ok):
             return EngineRound(False, None, report)
-        _, A_inv = invert(self.field, A_rx[sel])   # sel rows independent
+        with tr.span("engine.invert", cat="engine", K=K) as sp:
+            _, A_inv = invert(self.field, A_rx[sel])  # sel independent
+            sp.fence(A_inv)
         if isinstance(plan, RowGather):
             A_enc, A_post = A[idx[sel]], A_inv
             if seeds is not None:
@@ -513,15 +553,20 @@ class CodingEngine:
         """
         K, L = P.shape
         n = K + self.config.extra_tuples
-        if self.seeded:
-            # seeded engine: draw 4-byte row seeds; the tiny expansion
-            # drives row-space planning while the L-sized encode stays
-            # seed-addressed inside the kernel.
-            seeds = self.coding_seeds(key, n)
-            return self._run_round(P, self.expand_seeds(seeds, K),
-                                   channel, seeds=seeds)
-        A = self.coding_matrix(key, n, K)
-        return self._run_round(P, A, channel)
+        with obs.get_tracer().span("engine.round", cat="engine",
+                                   K=K, L=L, n=n) as sp:
+            if self.seeded:
+                # seeded engine: draw 4-byte row seeds; the tiny
+                # expansion drives row-space planning while the L-sized
+                # encode stays seed-addressed inside the kernel.
+                seeds = self.coding_seeds(key, n)
+                out = self._run_round(P, self.expand_seeds(seeds, K),
+                                      channel, seeds=seeds)
+            else:
+                A = self.coding_matrix(key, n, K)
+                out = self._run_round(P, A, channel)
+            sp.fence(out.packets)
+        return out
 
     # -- the fused hierarchical round (paper §III) ------------------------
 
@@ -578,8 +623,13 @@ class CodingEngine:
         """
         K, L = P.shape
         n_out = [len(ids) + spare_per_edge for ids in edges]
-        A = self.multi_edge_coding_matrix(key, edges, K, n_out)
-        return self._run_round(P, A, wan_channel)
+        with obs.get_tracer().span("engine.multi_edge_round",
+                                   cat="engine", K=K, L=L,
+                                   edges=len(edges)) as sp:
+            A = self.multi_edge_coding_matrix(key, edges, K, n_out)
+            out = self._run_round(P, A, wan_channel)
+            sp.fence(out.packets)
+        return out
 
 
 @functools.lru_cache(maxsize=None)

@@ -27,12 +27,12 @@ contribution is directly measurable.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.channel import ArrivalSchedule
 
 from .rounds import FLExperiment, train_cohort
@@ -87,34 +87,39 @@ def run_async_experiment(exp: FLExperiment, init_params: Any,
     global_params = init_params
     logs: list[AsyncRoundLog] = []
 
+    tr = obs.get_tracer()
     for t in range(rounds):
-        t0 = time.perf_counter()
-        client_params, weights, loss, walls = train_cohort(
-            exp, rng, global_params)
-        if compute is not None:
-            ct = compute.times(rng, len(client_params),
-                               measured_wall=walls)
-            result = exp.strategy.aggregate(client_params, weights,
-                                            global_params, rng,
-                                            compute_times=ct)
-        else:
-            result = exp.strategy.aggregate(client_params, weights,
-                                            global_params, rng)
-        global_params = result.global_params
-        rep = result.report
-        consumed = getattr(rep, "consumed", -1)
-        sim_time = getattr(rep, "sim_time", float("nan"))
-        sim_time_network = getattr(rep, "sim_time_network",
-                                   float("nan"))
+        with obs.timed("async.round", cat="fl", round=t) as sw:
+            client_params, weights, loss, walls = train_cohort(
+                exp, rng, global_params)
+            if compute is not None:
+                ct = compute.times(rng, len(client_params),
+                                   measured_wall=walls)
+                result = exp.strategy.aggregate(client_params, weights,
+                                                global_params, rng,
+                                                compute_times=ct)
+            else:
+                result = exp.strategy.aggregate(client_params, weights,
+                                                global_params, rng)
+            global_params = result.global_params
+            rep = result.report
+            consumed = getattr(rep, "consumed", -1)
+            sim_time = getattr(rep, "sim_time", float("nan"))
+            sim_time_network = getattr(rep, "sim_time_network",
+                                       float("nan"))
+            if tr.enabled:
+                tr.instant("async.decode", cat="fl", round=t,
+                           consumed=int(consumed),
+                           sim_time=float(sim_time))
 
-        acc = float("nan")
-        if (t + 1) % eval_every == 0:
-            acc = exp.eval_fn(global_params, exp.test_set.images,
-                              exp.test_set.labels)
+            acc = float("nan")
+            if (t + 1) % eval_every == 0:
+                acc = exp.eval_fn(global_params, exp.test_set.images,
+                                  exp.test_set.labels)
         logs.append(AsyncRoundLog(t, bool(result.decoded),
                                   result.n_aggregated, int(consumed),
                                   float(sim_time), loss, acc,
-                                  time.perf_counter() - t0,
+                                  sw.dur_s,
                                   float(sim_time_network)))
         if verbose:
             print(f"round {t:3d} decoded={result.decoded} "

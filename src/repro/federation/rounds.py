@@ -7,12 +7,12 @@ benchmarks (Fig. 3 / Fig. 4 / Table I).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.data.synthetic import SyntheticImageDataset, batches
 
 from .client import LocalTrainer
@@ -62,9 +62,10 @@ def train_cohort(exp: FLExperiment, rng: np.random.Generator,
         it = batches(ds_k, min(exp.batch_size, max(len(ds_k), 1)),
                      seed=int(rng.integers(0, 2**31 - 1)),
                      epochs=exp.trainer.local_epochs)
-        t0 = time.perf_counter()
-        p_k, loss_k = exp.trainer.train(global_params, it)
-        walls.append(time.perf_counter() - t0)
+        with obs.timed("fl.local_train", cat="fl",
+                       client=int(k)) as sw:
+            p_k, loss_k = exp.trainer.train(global_params, it)
+        walls.append(sw.dur_s)
         client_params.append(p_k)
         losses.append(loss_k)
         sizes.append(len(ds_k))
@@ -81,19 +82,19 @@ def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
     logs: list[RoundLog] = []
 
     for t in range(rounds):
-        t0 = time.perf_counter()
-        client_params, weights, loss, _ = train_cohort(exp, rng,
-                                                       global_params)
-        result = exp.strategy.aggregate(client_params, weights,
-                                        global_params, rng)
-        global_params = result.global_params
+        with obs.timed("fl.round", cat="fl", round=t) as sw:
+            client_params, weights, loss, _ = train_cohort(
+                exp, rng, global_params)
+            result = exp.strategy.aggregate(client_params, weights,
+                                            global_params, rng)
+            global_params = result.global_params
 
-        acc = float("nan")
-        if (t + 1) % eval_every == 0:
-            acc = exp.eval_fn(global_params, exp.test_set.images,
-                              exp.test_set.labels)
+            acc = float("nan")
+            if (t + 1) % eval_every == 0:
+                acc = exp.eval_fn(global_params, exp.test_set.images,
+                                  exp.test_set.labels)
         logs.append(RoundLog(t, bool(result.decoded), result.n_aggregated,
-                             loss, acc, time.perf_counter() - t0))
+                             loss, acc, sw.dur_s))
         if verbose:
             print(f"round {t:3d} decoded={result.decoded} "
                   f"loss={loss:.4f} acc={acc:.4f}")

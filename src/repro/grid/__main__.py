@@ -16,7 +16,8 @@ import argparse
 import json
 import pathlib
 import sys
-import time
+
+from repro import obs
 
 from .execute import run_grid
 from .report import grid_document, markdown_report
@@ -65,6 +66,10 @@ def main(argv=None) -> int:
                          "(default: 'smoke' with --smoke, else 'cli')")
     ap.add_argument("--outdir", default=".",
                     help="directory for the GRID_* artifacts")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also write the merged Chrome trace "
+                         "(default PATH: TRACE_grid_<out>.json)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -84,20 +89,26 @@ def main(argv=None) -> int:
 
     specs = axes.expand()
     print(f"grid: {len(specs)} scenarios, jobs={args.jobs}", flush=True)
-    t0 = time.perf_counter()
-    results = run_grid(specs, jobs=args.jobs,
-                       progress=lambda s: print(f"  {s}", flush=True))
-    wall = time.perf_counter() - t0
-
-    doc = grid_document(axes.config(), results)
-    doc["wall_s"] = wall
     outdir = pathlib.Path(args.outdir)
     outdir.mkdir(parents=True, exist_ok=True)
+    trace_path = None
+    if args.trace is not None:
+        trace_path = (pathlib.Path(args.trace) if args.trace
+                      else outdir / f"TRACE_grid_{out}.json")
+    with obs.timed("grid.run", cat="grid") as sw:
+        results = run_grid(
+            specs, jobs=args.jobs, trace_path=trace_path,
+            progress=lambda s: print(f"  {s}", flush=True))
+
+    doc = grid_document(axes.config(), results)
+    doc["wall_s"] = sw.dur_s
     json_path = outdir / f"GRID_{out}.json"
     md_path = outdir / f"GRID_{out}.md"
     json_path.write_text(json.dumps(doc, indent=2))
     md_path.write_text(markdown_report(doc))
-    print(f"wrote {json_path} and {md_path} ({wall:.1f}s total)")
+    print(f"wrote {json_path} and {md_path} ({sw.dur_s:.1f}s total)")
+    if trace_path is not None:
+        print(f"wrote {trace_path}")
     return 0
 
 

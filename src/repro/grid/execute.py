@@ -32,10 +32,11 @@ at ``jobs=1``.
 from __future__ import annotations
 
 import math
-import time
 from typing import Optional, Sequence
 
 import numpy as np
+
+from repro import obs
 
 from .spec import (ASYNC_STRATEGIES, ENGINE_STRATEGY, HIER_PREFIX,
                    SIM_STRATEGIES, ScenarioSpec)
@@ -47,6 +48,13 @@ ASYNC_N_CLIENTS = 8
 ASYNC_IMAGE_SIZE = 16
 HIER_L = 2048           # payload symbols per client in hier scenarios
 HIER_SPARES = 2
+
+# envelope spans contain the per-stage spans, so they are excluded
+# from a cell's per_stage breakdown (they would double-count it)
+_ENVELOPE_SPANS = ("grid.scenario", "grid.engine_rounds",
+                   "grid.hier_rounds", "engine.round",
+                   "engine.multi_edge_round", "fl.round", "async.round",
+                   "serve.trace")
 
 
 def _sim_metrics(spec: ScenarioSpec) -> dict:
@@ -116,21 +124,24 @@ def _hier_metrics(spec: ScenarioSpec) -> dict:
     wan = (ErasureChannel(p_erase=spec.p_dropout, seed=spec.seed)
            if spec.p_dropout > 0 else None)
     ok_rounds = 0
-    t0 = time.perf_counter()
-    for r in range(spec.rounds):
-        out = engine.multi_edge_round(
-            P, jax.random.fold_in(key, r), edges,
-            spare_per_edge=HIER_SPARES, wan_channel=wan)
-        if out.ok:
-            assert (out.packets == P).all()
-            ok_rounds += 1
-    wall = time.perf_counter() - t0
+    with obs.timed("grid.hier_rounds", cat="grid",
+                   rounds=spec.rounds) as sw:
+        out = None
+        for r in range(spec.rounds):
+            out = engine.multi_edge_round(
+                P, jax.random.fold_in(key, r), edges,
+                spare_per_edge=HIER_SPARES, wan_channel=wan)
+            if out.ok:
+                assert (out.packets == P).all()
+                ok_rounds += 1
+        if out is not None:      # fence before the clock stops
+            sw.fence(out.packets)
     return {
         "num_edges": E,
         "kernel_resolved": engine.kernel_name,
         "payload_symbols": K * HIER_L,
         "decode_rate": ok_rounds / max(spec.rounds, 1),
-        "wall_s_per_round": wall / max(spec.rounds, 1),
+        "wall_s_per_round": sw.dur_s / max(spec.rounds, 1),
     }
 
 
@@ -163,14 +174,17 @@ def _engine_metrics(spec: ScenarioSpec) -> dict:
     channel = (ErasureChannel(p_erase=spec.p_dropout, seed=spec.seed)
                if spec.p_dropout > 0 else None)
     ok_rounds = 0
-    t0 = time.perf_counter()
-    for r in range(spec.rounds):
-        out = engine.round(P, jax.random.fold_in(key, r),
-                           channel=channel)
-        if out.ok:
-            assert (out.packets == P).all()
-            ok_rounds += 1
-    wall = time.perf_counter() - t0
+    with obs.timed("grid.engine_rounds", cat="grid",
+                   rounds=spec.rounds) as sw:
+        out = None
+        for r in range(spec.rounds):
+            out = engine.round(P, jax.random.fold_in(key, r),
+                               channel=channel)
+            if out.ok:
+                assert (out.packets == P).all()
+                ok_rounds += 1
+        if out is not None:      # fence before the clock stops
+            sw.fence(out.packets)
     n_tuples = K + extra
     wire = packet_wire_bytes(K, HIER_L, spec.s, seeded=engine.seeded)
     wire_mat = packet_wire_bytes(K, HIER_L, spec.s, seeded=False)
@@ -179,7 +193,7 @@ def _engine_metrics(spec: ScenarioSpec) -> dict:
         "seeded": engine.seeded,
         "payload_symbols": K * HIER_L,
         "decode_rate": ok_rounds / max(spec.rounds, 1),
-        "wall_s_per_round": wall / max(spec.rounds, 1),
+        "wall_s_per_round": sw.dur_s / max(spec.rounds, 1),
         "wire_bytes_per_packet": wire,
         "wire_bytes_per_round": wire * n_tuples,
         "wire_overhead_ratio": wire / wire_mat,
@@ -242,59 +256,98 @@ def _async_metrics(spec: ScenarioSpec) -> dict:
     return m
 
 
-def run_scenario(spec: ScenarioSpec) -> dict:
-    """Execute one scenario; returns its GRID_*.json entry."""
-    t0 = time.perf_counter()
-    if spec.strategy in SIM_STRATEGIES:
-        metrics = _sim_metrics(spec)
-    elif spec.strategy.startswith(HIER_PREFIX):
-        metrics = _hier_metrics(spec)
-    elif spec.strategy in ASYNC_STRATEGIES:
-        metrics = _async_metrics(spec)
-    elif spec.strategy == ENGINE_STRATEGY:
-        metrics = _engine_metrics(spec)
-    else:
-        raise ValueError(f"unknown strategy {spec.strategy!r}")
-    return {
+def _run_scenario_events(spec: ScenarioSpec) -> tuple[dict, list]:
+    """Execute one scenario under a scenario-local tracer.
+
+    A fresh enabled :class:`repro.obs.Tracer` is installed for the
+    duration (and the previous tracer restored after), so every engine
+    / sim / serve span the scenario emits is captured; the entry's
+    ``per_stage`` field is the per-span-name time breakdown.  Returns
+    ``(entry, trace_events)`` — both plain picklable data, which is
+    what lets :func:`run_grid` ship them back from spawn workers and
+    merge the per-process traces by pid lane.
+    """
+    prev = obs.get_tracer()
+    tr = obs.Tracer(process_name=f"grid:{spec.name}")
+    obs.set_tracer(tr)
+    try:
+        with obs.timed("grid.scenario", cat="grid",
+                       scenario=spec.name) as sw:
+            if spec.strategy in SIM_STRATEGIES:
+                metrics = _sim_metrics(spec)
+            elif spec.strategy.startswith(HIER_PREFIX):
+                metrics = _hier_metrics(spec)
+            elif spec.strategy in ASYNC_STRATEGIES:
+                metrics = _async_metrics(spec)
+            elif spec.strategy == ENGINE_STRATEGY:
+                metrics = _engine_metrics(spec)
+            else:
+                raise ValueError(f"unknown strategy {spec.strategy!r}")
+    finally:
+        obs.set_tracer(prev)
+    prev.extend(tr.events)       # no-op unless an outer tracer is live
+    entry = {
         "seed": spec.seed,
         "axes": spec.axes(),
         "rounds": spec.rounds,
         "clients_per_round": spec.clients_per_round,
-        "wall_s": time.perf_counter() - t0,
+        "wall_s": sw.dur_s,
+        "per_stage": obs.stage_totals(tr.events,
+                                      exclude=_ENVELOPE_SPANS),
         **metrics,
     }
+    return entry, tr.events
+
+
+def run_scenario(spec: ScenarioSpec) -> dict:
+    """Execute one scenario; returns its GRID_*.json entry."""
+    return _run_scenario_events(spec)[0]
 
 
 def run_grid(specs: Sequence[ScenarioSpec], jobs: int = 1,
-             progress=None) -> dict:
+             progress=None, trace_path=None) -> dict:
     """Run every scenario; returns ``{name: entry}`` in spec order.
 
     ``jobs > 1`` fans out over a spawn-context process pool (each
     worker is a fresh interpreter with its own jax runtime — fork
     would corrupt a warmed-up XLA client).  Results are identical to
     the serial path; only wall time changes.
+
+    ``trace_path`` writes the merged Chrome trace of every scenario to
+    that file — workers keep their own pid, so a ``jobs=N`` run shows
+    N process lanes on one epoch-aligned timeline.
     """
     names = [s.name for s in specs]
     if len(set(names)) != len(names):
         raise ValueError("duplicate scenario names in grid")
+    all_events: list = []
     if jobs <= 1 or len(specs) <= 1:
         results = {}
         for s in specs:
-            results[s.name] = run_scenario(s)
+            results[s.name], events = _run_scenario_events(s)
+            all_events.extend(events)
             if progress:
                 progress(f"{s.name}: {results[s.name]['wall_s']:.1f}s")
-        return results
+    else:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
 
-    import multiprocessing as mp
-    from concurrent.futures import ProcessPoolExecutor
-
-    ctx = mp.get_context("spawn")
-    results: dict[str, Optional[dict]] = {}
-    with ProcessPoolExecutor(max_workers=min(jobs, len(specs)),
-                             mp_context=ctx) as pool:
-        futures = {s.name: pool.submit(run_scenario, s) for s in specs}
-        for name in names:
-            results[name] = futures[name].result()
-            if progress:
-                progress(f"{name}: {results[name]['wall_s']:.1f}s")
+        ctx = mp.get_context("spawn")
+        results: dict[str, Optional[dict]] = {}
+        with ProcessPoolExecutor(max_workers=min(jobs, len(specs)),
+                                 mp_context=ctx) as pool:
+            futures = {s.name: pool.submit(_run_scenario_events, s)
+                       for s in specs}
+            for name in names:
+                results[name], events = futures[name].result()
+                all_events.extend(events)
+                if progress:
+                    progress(f"{name}: "
+                             f"{results[name]['wall_s']:.1f}s")
+    if trace_path is not None:
+        obs.save_events(obs.merge_events(all_events), trace_path)
+    # a live outer tracer also receives the merged events (the serial
+    # path already extended it per scenario; workers could not)
+    if jobs > 1 and len(specs) > 1:
+        obs.get_tracer().extend(all_events)
     return results

@@ -17,7 +17,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import time
 import traceback
 from typing import Any
 
@@ -25,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHITECTURES, get_config
 from repro.launch import roofline as rl
 from repro.launch import sharding as sh
@@ -105,7 +105,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     """Lower + compile one (arch, shape, mesh) and extract analyses."""
     from repro.models import attention as attn_mod
     from repro.models import moe as moe_mod
-    t0 = time.time()
+    t0 = obs.clock()
     cfg = get_config(arch)
     sh.set_moe_inner_shard(moe_shard)
     attn_mod.set_attend_bf16(attn_bf16)
@@ -178,12 +178,12 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             )
             lowered = jitted.lower(params_s, d_in["cache"], d_in["token"])
             tokens = shape.global_batch
-        t_lower = time.time()
-        compiled = lowered.compile()
-        t_compile = time.time()
+        t_lower = obs.clock()
+        with obs.timed("launch.compile", cat="launch", arch=arch) as sw:
+            compiled = lowered.compile()
 
     rec["lower_s"] = round(t_lower - t0, 2)
-    rec["compile_s"] = round(t_compile - t_lower, 2)
+    rec["compile_s"] = round(sw.dur_s, 2)
     rec["memory_analysis"] = _memory_analysis_dict(compiled)
     rec["cost_analysis"] = _cost_analysis_dict(compiled)
 

@@ -12,13 +12,13 @@ on a real TPU slice drop it and pass --mesh-data/--mesh-model.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.configs import get_config, reduced_config
 from repro.data.tokens import make_token_stream
 from repro.launch.steps import make_train_step
@@ -68,7 +68,7 @@ def main() -> None:
         jstep = jax.jit(step_fn, donate_argnums=(0, 1))
         stream = make_token_stream(cfg.vocab_size, seed=0)
         losses = []
-        t0 = time.time()
+        t0 = obs.clock()
         for i in range(args.steps):
             b = stream.batch(args.batch, args.seq)
             batch = {"tokens": jnp.asarray(b["tokens"]),
@@ -81,7 +81,7 @@ def main() -> None:
                 params, opt_state, batch, jax.random.fold_in(key, i))
             losses.append(float(loss))
             if (i + 1) % args.log_every == 0:
-                dt = time.time() - t0
+                dt = obs.clock() - t0
                 print(f"step {i + 1:5d} loss={np.mean(losses[-args.log_every:]):.4f} "
                       f"({dt / (i + 1):.2f}s/step)", flush=True)
         print(f"final loss {np.mean(losses[-5:]):.4f} "

@@ -1,0 +1,57 @@
+"""repro.obs — tracing, metrics, and per-stage profiling.
+
+One timing idiom for the whole repo:
+
+* ``with obs.timed("fl.round") as sw: ...`` — always-on stopwatch
+  (replaces raw ``time.perf_counter()`` pairs); ``sw.dur_s`` after.
+* ``with obs.get_tracer().span("engine.encode") as sp:
+  sp.fence(out)`` — a Chrome trace span that fences device work, only
+  recorded when tracing is enabled (``obs.set_tracer(obs.Tracer())``).
+* ``reg = obs.MetricsRegistry(); reg.counter("dispatches").inc()`` —
+  mergeable counters/gauges/histograms snapshotting to
+  ``fednc-metrics-v1`` JSON.
+
+``python -m repro.obs TRACE_serve.json`` summarizes saved traces;
+see docs/observability.md.
+"""
+from repro.obs.metrics import (
+    METRICS_SCHEMA,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    exp_buckets,
+    merge_snapshots,
+)
+from repro.obs.report import (
+    load_trace,
+    markdown_summary,
+    merge_events,
+    stage_totals,
+    summarize,
+    validate_trace,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    TRACE_SCHEMA,
+    NullTracer,
+    Tracer,
+    clock,
+    device_sync,
+    events_document,
+    get_tracer,
+    save_events,
+    set_tracer,
+    timed,
+)
+
+__all__ = [
+    "METRICS_SCHEMA", "TRACE_SCHEMA",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "exp_buckets", "merge_snapshots",
+    "load_trace", "markdown_summary", "merge_events", "stage_totals",
+    "summarize", "validate_trace",
+    "NULL_TRACER", "NullTracer", "Tracer", "clock", "device_sync",
+    "events_document", "get_tracer", "save_events", "set_tracer",
+    "timed",
+]

@@ -21,11 +21,11 @@ from __future__ import annotations
 import hashlib
 from collections import deque
 from dataclasses import dataclass, field
-from time import perf_counter
 from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.seeds import expand_rows_jit
 from repro.engine import DecoderBank
 
@@ -65,6 +65,7 @@ class ServeReport:
     wall_s: float
     max_concurrent: int
     completions: list[JobCompletion] = field(default_factory=list)
+    metrics: Optional[dict] = None   # fednc-metrics-v1 snapshot
 
     @property
     def packets_per_s(self) -> float:
@@ -103,10 +104,35 @@ class DecodeServer:
         self._slot_job = np.full((slots,), -1, np.int64)
         self._jobs: dict[int, _JobState] = {}
         self._waiting: deque[int] = deque()
-        self.ticks = 0
-        self.late_dropped = 0
-        self.packets_ingested = 0
-        self.max_concurrent = 0
+        m = self.metrics = obs.MetricsRegistry()
+        self._m_ticks = m.counter("serve.ticks")
+        self._m_ingested = m.counter("serve.packets_ingested")
+        self._m_late = m.counter("serve.late_dropped")
+        self._m_depth = m.gauge("serve.queue_depth")
+        self._m_busy = m.gauge("serve.slots_busy")
+        # batch-size buckets in packets (powers of two up to a full
+        # slots x g_tick block); latency buckets log-spaced 10us..100s
+        self._m_batch = m.histogram(
+            "serve.ingest_batch",
+            bounds=[2 ** i for i in range(11)])
+        self._m_latency = m.histogram("serve.job_latency_s")
+
+    # legacy attribute names (pre-obs) kept as counter-backed views
+    @property
+    def ticks(self) -> int:
+        return self._m_ticks.value
+
+    @property
+    def late_dropped(self) -> int:
+        return self._m_late.value
+
+    @property
+    def packets_ingested(self) -> int:
+        return self._m_ingested.value
+
+    @property
+    def max_concurrent(self) -> int:
+        return int(self._m_busy.max or 0)
 
     # -- job lifecycle ----------------------------------------------------
 
@@ -116,7 +142,7 @@ class DecodeServer:
         if job in self._jobs:
             raise ValueError(f"job {job} already submitted")
         st = _JobState(k=int(k), l=self.bank.L if l is None else int(l),
-                       t_submit=perf_counter())
+                       t_submit=obs.clock())
         self._jobs[job] = st
         free = np.nonzero(self._slot_job < 0)[0]
         if free.size:
@@ -129,8 +155,7 @@ class DecodeServer:
         self.bank.open(slot, st.k, st.l)
         self._slot_job[slot] = job
         st.slot = slot
-        self.max_concurrent = max(
-            self.max_concurrent, int(np.sum(self._slot_job >= 0)))
+        self._m_busy.set(int(np.sum(self._slot_job >= 0)))
         for seed, row, payload in st.backlog:
             self.sched.enqueue(slot, seed=seed, payload=payload, row=row)
         st.backlog.clear()
@@ -145,7 +170,7 @@ class DecodeServer:
         packet is dropped and counted in ``late_dropped``)."""
         st = self._jobs[int(job)]
         if st.done is not None:
-            self.late_dropped += 1
+            self._m_late.inc()
             return False
         st.offered += 1
         if st.slot is None:
@@ -176,14 +201,28 @@ class DecodeServer:
     def tick(self) -> bool:
         """One scheduler tick: drain queues, one ingest dispatch,
         emit completions, admit waiting jobs.  False if idle."""
+        tr = obs.get_tracer()
+        depth = self.sched.pending
+        if depth == 0:
+            return False
+        self._m_depth.set(depth)
+        self._m_busy.set(int(np.sum(self._slot_job >= 0)))
+        if tr.enabled:
+            tr.counter("serve.queue_depth", depth)
+            tr.counter("serve.slots_busy",
+                       int(np.sum(self._slot_job >= 0)))
         block = self.sched.next_block()
-        if block is None:
+        if block is None:                      # pragma: no cover
             return False
         rows, seeds, use, valid, C = block
-        ranks = self.bank.ingest(rows=rows, seeds=seeds, use_seed=use,
-                                 valid=valid, C=C, batched=self.batched)
-        self.ticks += 1
-        self.packets_ingested += int(valid.sum())
+        batch = int(valid.sum())
+        with tr.span("serve.ingest", cat="serve", packets=batch) as sp:
+            ranks = sp.fence(self.bank.ingest(
+                rows=rows, seeds=seeds, use_seed=use, valid=valid, C=C,
+                batched=self.batched))
+        self._m_ticks.inc()
+        self._m_ingested.inc(batch)
+        self._m_batch.observe(batch)
         freed = []
         for slot in np.nonzero(valid.any(axis=1))[0]:
             job = int(self._slot_job[slot])
@@ -192,11 +231,15 @@ class DecodeServer:
                 p0 = int(np.argmax(ranks[slot] >= st.k))
                 arrivals = st.arrivals + int(valid[slot, : p0 + 1].sum())
                 st.payload = np.asarray(self.bank.payload(slot))
+                latency = obs.clock() - st.t_submit
                 st.done = JobCompletion(
                     job=job, k=st.k, l=st.l, arrivals=arrivals,
-                    latency_s=perf_counter() - st.t_submit,
+                    latency_s=latency,
                     payload_sha=payload_digest(st.payload))
-                self.late_dropped += self.sched.clear(slot)
+                self._m_latency.observe(latency)
+                tr.instant("serve.complete", cat="serve", job=job,
+                           arrivals=arrivals)
+                self._m_late.inc(self.sched.clear(slot))
                 self.bank.close(slot)
                 self._slot_job[slot] = -1
                 freed.append(slot)
@@ -234,20 +277,20 @@ def serve_trace(trace: ServeTrace, *, slots: int = 8,
                                            trace.s))
             for p, i in enumerate(idx):
                 rows_at[int(i)] = A[p]
-    t0 = perf_counter()
     offered = 0
-    for i in range(trace.n_packets):
-        j = int(trace.job_of[i])
-        meta = trace.jobs[j]
-        if j not in srv._jobs:
-            srv.submit(j, meta.K, meta.L)
-        srv.offer(j, trace.payloads[i, : meta.L],
-                  seed=int(trace.row_seeds[i]), row=rows_at.get(i))
-        offered += 1
-        while srv.sched.max_depth >= g_tick:
-            srv.tick()
-    srv.drain()
-    wall = perf_counter() - t0
+    with obs.timed("serve.trace", cat="serve",
+                   jobs=trace.n_jobs) as sw:
+        for i in range(trace.n_packets):
+            j = int(trace.job_of[i])
+            meta = trace.jobs[j]
+            if j not in srv._jobs:
+                srv.submit(j, meta.K, meta.L)
+            srv.offer(j, trace.payloads[i, : meta.L],
+                      seed=int(trace.row_seeds[i]), row=rows_at.get(i))
+            offered += 1
+            while srv.sched.max_depth >= g_tick:
+                srv.tick()
+        srv.drain()
     comps = srv.completions
     return ServeReport(
         jobs=trace.n_jobs, completed=len(comps),
@@ -255,5 +298,5 @@ def serve_trace(trace: ServeTrace, *, slots: int = 8,
         packets_ingested=srv.packets_ingested,
         late_dropped=srv.late_dropped,
         ticks=srv.ticks, dispatches=srv.bank.dispatches,
-        wall_s=wall, max_concurrent=srv.max_concurrent,
-        completions=comps)
+        wall_s=sw.dur_s, max_concurrent=srv.max_concurrent,
+        completions=comps, metrics=srv.metrics.snapshot())

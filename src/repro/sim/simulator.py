@@ -35,6 +35,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.coupon import expected_draws_fedavg_asymptotic
 
 from .distributions import DistSpec
@@ -140,6 +141,11 @@ class NetworkSimulator:
             self._use_stream = k <= config.stream_decoder_max_k
         else:
             raise ValueError(f"unknown decoder {config.decoder!r}")
+        m = self.metrics = obs.MetricsRegistry()
+        self._m_rounds = m.counter("sim.rounds")
+        self._m_nc_draws = m.counter("sim.fednc_draws")
+        self._m_avg_draws = m.counter("sim.fedavg_draws")
+        self._m_dropped = m.counter("sim.dropped")
 
     # -- per-round pieces -------------------------------------------------
 
@@ -247,6 +253,20 @@ class NetworkSimulator:
         """Simulate `rounds` rounds; deterministic in `config.seed`."""
         rng = np.random.default_rng(self.config.seed)
         trace = SimTrace(self.config)
+        tr = obs.get_tracer()
         for t in range(rounds):
-            trace.rounds.append(self._round(t, rng))
+            with tr.span("sim.round", cat="sim", round=t):
+                stats = self._round(t, rng)
+            trace.rounds.append(stats)
+            self._m_rounds.inc()
+            self._m_nc_draws.inc(stats.fednc_draws)
+            self._m_avg_draws.inc(stats.fedavg_draws)
+            self._m_dropped.inc(stats.n_dropped)
+            if tr.enabled:
+                tr.instant("sim.decode", cat="sim", round=t,
+                           draws=stats.fednc_draws,
+                           sim_time=stats.fednc_time)
+                if stats.fedavg_complete:
+                    tr.instant("sim.fedavg_complete", cat="sim",
+                               round=t, draws=stats.fedavg_draws)
         return trace

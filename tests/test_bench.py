@@ -37,7 +37,8 @@ def _doctored_tree(tmp_path, replace: dict) -> pathlib.Path:
         (ROOT / "scripts" / "check_bench.py").read_text())
     for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json",
                   "BENCH_sim.json", "BENCH_serve.json",
-                  "GRID_grid.json", "GRID_smoke.json"):
+                  "GRID_grid.json", "GRID_smoke.json",
+                  "TRACE_serve.json"):
         data = (json.dumps(replace[fname]) if fname in replace
                 else (ROOT / fname).read_text())
         (root / fname).write_text(data)
@@ -186,6 +187,78 @@ def test_check_bench_smoke_serve_artifact_relaxed(tmp_path):
     proc = _run_doctored(root)
     assert proc.returncode == 1
     assert "serve_sequential" in proc.stderr
+
+
+def test_check_bench_catches_broken_metrics_snapshot(tmp_path):
+    """The embedded fednc-metrics-v1 snapshot is validated standalone:
+    a wrong schema tag and a histogram whose counts disagree with its
+    bounds/count must both fail."""
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["metrics"]["schema"] = "fednc-metrics-v0"
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "fednc-metrics-v1" in proc.stderr
+
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    hist = serve["metrics"]["metrics"]["serve.job_latency_s"]
+    hist["counts"] = hist["counts"][:-1]          # drop overflow bucket
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "len(bounds)+1" in proc.stderr
+
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    serve["metrics"]["metrics"]["serve.job_latency_s"]["count"] += 1
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "sum(counts)" in proc.stderr
+
+    serve = json.loads((ROOT / "BENCH_serve.json").read_text())
+    del serve["metrics"]["metrics"]["serve.queue_depth"]
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"BENCH_serve.json": serve}))
+    assert proc.returncode == 1
+    assert "serve.queue_depth" in proc.stderr
+
+
+def test_check_bench_catches_broken_trace(tmp_path):
+    """TRACE_*.json in the root must be valid Chrome trace-event JSON:
+    a duration event stripped of its timestamp, and a wrong schema
+    tag, must both fail."""
+    trace = json.loads((ROOT / "TRACE_serve.json").read_text())
+    span = next(e for e in trace["traceEvents"] if e["ph"] == "X")
+    del span["ts"]
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"TRACE_serve.json": trace}))
+    assert proc.returncode == 1
+    assert "missing 'ts'" in proc.stderr
+
+    trace = json.loads((ROOT / "TRACE_serve.json").read_text())
+    trace["otherData"]["schema"] = "not-a-trace"
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"TRACE_serve.json": trace}))
+    assert proc.returncode == 1
+    assert "fednc-trace-v1" in proc.stderr
+
+
+def test_check_bench_catches_grid_missing_per_stage(tmp_path):
+    """Every grid cell must publish its per-stage wall breakdown; a
+    dropped or empty per_stage mapping fails."""
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    next(iter(smoke["scenarios"].values())).pop("per_stage")
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "per_stage" in proc.stderr
+
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    next(iter(smoke["scenarios"].values()))["per_stage"] = {}
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "per_stage" in proc.stderr
 
 
 def test_check_bench_catches_grid_missing_seed(tmp_path):

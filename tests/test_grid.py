@@ -91,6 +91,7 @@ def test_sim_scenario_is_deterministic():
                     rounds=4).expand()[0]
     a, b = run_scenario(spec), run_scenario(spec)
     a.pop("wall_s"), b.pop("wall_s")
+    a.pop("per_stage"), b.pop("per_stage")   # wall-clock, like wall_s
     assert a == b
 
 
@@ -125,9 +126,9 @@ def test_run_grid_serial_matches_scenarios():
     assert list(results) == [s.name for s in specs]
     for s in specs:
         solo = run_scenario(s)
-        solo.pop("wall_s")
+        solo.pop("wall_s"), solo.pop("per_stage")
         got = dict(results[s.name])
-        got.pop("wall_s")
+        got.pop("wall_s"), got.pop("per_stage")
         assert got == solo
 
 
@@ -143,6 +144,7 @@ def test_run_grid_process_parallel_matches_serial():
     for name in serial:
         a, b = dict(serial[name]), dict(parallel[name])
         a.pop("wall_s"), b.pop("wall_s")
+        a.pop("per_stage"), b.pop("per_stage")
         assert a == b
 
 

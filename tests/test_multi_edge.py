@@ -153,7 +153,9 @@ def test_multi_edge_round_bit_exact_vs_per_edge_reference(E, wan):
 
 def test_multi_edge_round_fewer_dispatches():
     """The fused round's L-sized dispatch count is independent of E;
-    the per-edge reference grows linearly with E."""
+    the per-edge reference grows linearly with E.  Counted via each
+    engine's obs `engine.dispatches` counter (the counters are
+    monotonic, so rounds are measured as before/after diffs)."""
     s, K, L = 8, 8, 1024
     cfg = FedNCConfig(s=s, kernel_impl="jnp_packed", chunk_l=256)
     f = get_field(s)
@@ -161,19 +163,21 @@ def test_multi_edge_round_fewer_dispatches():
     from repro.core.fednc import engine_for
     eng = _engine(chunk_l=256)
     ref_eng = engine_for(cfg)       # the reference path's cached engine
+    ctr = eng.metrics.counter("engine.dispatches")
+    ref_ctr = ref_eng.metrics.counter("engine.dispatches")
     counts = {}
     for E in (2, 4):
         edges = hierarchy.partition_edges(K, E)
-        before = eng.dispatch_count
+        before = ctr.value
         out = eng.multi_edge_round(P, jax.random.PRNGKey(1),
                                    [e.client_ids for e in edges],
                                    spare_per_edge=1)
-        counts[("fused", E)] = eng.dispatch_count - before
+        counts[("fused", E)] = ctr.value - before
         assert out.ok
-        before = ref_eng.dispatch_count
+        before = ref_ctr.value
         ref = hierarchy.per_edge_round_reference(
             P, edges, cfg, jax.random.PRNGKey(1), spare_per_edge=1)
-        counts[("ref", E)] = ref_eng.dispatch_count - before
+        counts[("ref", E)] = ref_ctr.value - before
         assert ref.ok
     # fused: one _stream with 2 matmuls per chunk, E-independent
     nc = -(-L // 256)

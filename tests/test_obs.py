@@ -1,0 +1,310 @@
+"""repro.obs: trace round-trip, metric merge laws, no-op neutrality.
+
+The observability layer must never change what it observes: the
+NULL_TRACER path has to be bit-exact with the traced path, snapshots
+must merge associatively (grid workers reduce in arbitrary order),
+and the serialized artifacts must stay valid Chrome trace-event JSON
+(the contract scripts/check_bench.py re-checks standalone).
+"""
+import json
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.gf import get_field
+from repro.engine import CodingEngine, EngineConfig
+from repro.serve import poisson_multitenant_trace, serve_trace
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(autouse=True)
+def _null_tracer():
+    """Every test starts and ends with tracing disabled."""
+    obs.set_tracer(obs.NULL_TRACER)
+    yield
+    obs.set_tracer(obs.NULL_TRACER)
+
+
+# ---------------------------------------------------------------------------
+# Trace document round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_trace_round_trips_as_valid_chrome_json(tmp_path):
+    tr = obs.Tracer(process_name="test")
+    with tr.span("outer", cat="t", k=3) as sp:
+        with tr.span("inner", cat="t"):
+            pass
+        sp.set(done=True)
+    tr.instant("mark", cat="t", x=1)
+    tr.counter("depth", 7)
+    path = tr.save(tmp_path / "TRACE_t.json")
+
+    doc = json.loads(path.read_text())
+    assert doc["otherData"]["schema"] == obs.TRACE_SCHEMA
+    events = obs.load_trace(path)
+    assert obs.validate_trace(events) == []
+    by_ph = {}
+    for ev in events:
+        by_ph.setdefault(ev["ph"], []).append(ev)
+    assert {e["name"] for e in by_ph["X"]} == {"outer", "inner"}
+    outer = next(e for e in by_ph["X"] if e["name"] == "outer")
+    inner = next(e for e in by_ph["X"] if e["name"] == "inner")
+    # the span nesting holds on the timeline, and set() args landed
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert outer["args"] == {"k": 3, "done": True}
+    assert by_ph["i"][0]["s"] == "t"
+    assert by_ph["C"][0]["args"] == {"depth": 7.0}
+    assert by_ph["M"][0]["args"]["name"] == "test"
+
+
+def test_validate_trace_rejects_malformed_events():
+    assert obs.validate_trace([{"ph": "X"}])      # no name
+    assert obs.validate_trace(
+        [{"name": "a", "ph": "X", "pid": 1, "tid": 0, "ts": 0.0}])
+    assert obs.validate_trace(
+        [{"name": "q", "ph": "C", "ts": 0.0, "pid": 1, "tid": 0,
+          "args": {"q": "high"}}])
+    # metadata events are exempt from ts/pid/tid
+    assert obs.validate_trace(
+        [{"name": "process_name", "ph": "M", "args": {"name": "w"}}]) \
+        == []
+
+
+def test_merge_keeps_pid_lanes_and_orders_by_time():
+    a = [{"name": "s", "ph": "X", "ts": 10.0, "dur": 1.0, "pid": 1,
+          "tid": 0}]
+    b = [{"name": "process_name", "ph": "M", "pid": 2, "tid": 0,
+          "args": {"name": "w"}},
+         {"name": "s", "ph": "X", "ts": 5.0, "dur": 1.0, "pid": 2,
+          "tid": 0}]
+    merged = obs.merge_events(a, b)
+    assert [e["ph"] for e in merged] == ["M", "X", "X"]
+    assert [e.get("pid") for e in merged] == [2, 2, 1]
+    assert obs.summarize(merged)["processes"] == 2
+
+
+def test_stage_totals_excludes_envelopes():
+    evs = [{"name": "outer", "ph": "X", "ts": 0, "dur": 5e6, "pid": 1,
+            "tid": 0},
+           {"name": "leaf", "ph": "X", "ts": 0, "dur": 2e6, "pid": 1,
+            "tid": 0},
+           {"name": "leaf", "ph": "X", "ts": 2e6, "dur": 1e6, "pid": 1,
+            "tid": 0}]
+    assert obs.stage_totals(evs, exclude=("outer",)) == {"leaf": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# Metrics: snapshot + merge algebra
+# ---------------------------------------------------------------------------
+
+
+def _random_registry(rng: random.Random) -> obs.MetricsRegistry:
+    reg = obs.MetricsRegistry()
+    c = reg.counter("c")
+    for _ in range(rng.randrange(4)):
+        c.inc(rng.randrange(1, 10))
+    g = reg.gauge("g")
+    for _ in range(rng.randrange(4)):
+        g.set(rng.uniform(-5, 5))
+    h = reg.histogram("h", bounds=(1.0, 10.0, 100.0))
+    for _ in range(rng.randrange(6)):
+        h.observe(rng.uniform(0.1, 500.0))
+    return reg
+
+
+def _seeded_snapshots(seed: int, n: int = 3) -> list:
+    rng = random.Random(seed)
+    return [_random_registry(rng).snapshot() for _ in range(n)]
+
+
+def _close(x, y, path="") -> None:
+    """Snapshots must agree exactly on structure/ints and up to float
+    rounding on sums (addition reassociates across merge orders)."""
+    assert type(x) is type(y), f"{path}: {type(x)} vs {type(y)}"
+    if isinstance(x, dict):
+        assert x.keys() == y.keys(), path
+        for k in x:
+            _close(x[k], y[k], f"{path}/{k}")
+    elif isinstance(x, list):
+        assert len(x) == len(y), path
+        for i, (a, b) in enumerate(zip(x, y)):
+            _close(a, b, f"{path}[{i}]")
+    elif isinstance(x, float):
+        assert x == pytest.approx(y, rel=1e-9), path
+    else:
+        assert x == y, path
+
+
+def _merge_associative(snaps) -> None:
+    a, b, c = snaps
+    left = obs.merge_snapshots(obs.merge_snapshots(a, b), c)
+    right = obs.merge_snapshots(a, obs.merge_snapshots(b, c))
+    _close(left, right)
+    flat = obs.merge_snapshots(a, b, c)
+    assert flat == left
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_merge_snapshots_associative(seed):
+    _merge_associative(_seeded_snapshots(seed))
+
+
+if HAVE_HYPOTHESIS:                                    # pragma: no branch
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(min_value=0, max_value=10**9))
+    def test_merge_snapshots_associative_hypothesis(seed):
+        _merge_associative(_seeded_snapshots(seed))
+
+
+def test_merged_snapshot_matches_single_registry_totals():
+    reg1, reg2 = obs.MetricsRegistry(), obs.MetricsRegistry()
+    both = obs.MetricsRegistry()
+    for v, reg in ((3.0, reg1), (7.0, reg2)):
+        reg.counter("n").inc(int(v))
+        reg.gauge("q").set(v)
+        reg.histogram("lat").observe(v)
+        both.counter("n").inc(int(v))
+        both.gauge("q").set(v)
+        both.histogram("lat").observe(v)
+    merged = obs.merge_snapshots(reg1.snapshot(), reg2.snapshot())
+    assert merged == both.snapshot()
+
+
+def test_histogram_merge_rejects_mismatched_bounds():
+    a = obs.Histogram("h", bounds=(1.0, 2.0)).snapshot()
+    b = obs.Histogram("h", bounds=(1.0, 3.0)).snapshot()
+    da = {"schema": obs.METRICS_SCHEMA, "metrics": {"h": a}}
+    db = {"schema": obs.METRICS_SCHEMA, "metrics": {"h": b}}
+    with pytest.raises(ValueError):
+        obs.merge_snapshots(da, db)
+
+
+def test_histogram_percentile_brackets_samples():
+    h = obs.Histogram("lat", bounds=obs.exp_buckets())
+    for v in (0.001, 0.002, 0.004, 0.1):
+        h.observe(v)
+    assert h.percentile(1.0) == pytest.approx(0.1)
+    assert 0.001 <= h.percentile(0.5) <= 0.1
+
+
+# ---------------------------------------------------------------------------
+# No-op neutrality: tracing must not change what it observes
+# ---------------------------------------------------------------------------
+
+
+def test_engine_round_bit_exact_tracing_on_and_off():
+    s, K, L = 8, 6, 257
+    f = get_field(s)
+    P = f.random_elements(jax.random.PRNGKey(2), (K, L))
+    eng = CodingEngine(EngineConfig(s=s, kernel="jnp_packed",
+                                    chunk_l=64, extra_tuples=2))
+    off = eng.round(P, jax.random.PRNGKey(9))
+    tr = obs.set_tracer(obs.Tracer())
+    try:
+        on = eng.round(P, jax.random.PRNGKey(9))
+    finally:
+        obs.set_tracer(obs.NULL_TRACER)
+    assert off.ok and on.ok
+    np.testing.assert_array_equal(np.asarray(off.packets),
+                                  np.asarray(on.packets))
+    # the traced run really did record the per-stage spans
+    names = {e["name"] for e in tr.events}
+    assert {"engine.round", "engine.encode", "engine.invert"} <= names
+
+
+def test_serve_trace_bit_exact_tracing_on_and_off():
+    trace = poisson_multitenant_trace(4, 6, 32, s=8, rate=4.0,
+                                      extra_packets=2, seed=3)
+    off = serve_trace(trace, slots=4, g_tick=4, batched=True)
+    tr = obs.set_tracer(obs.Tracer())
+    try:
+        on = serve_trace(trace, slots=4, g_tick=4, batched=True)
+    finally:
+        obs.set_tracer(obs.NULL_TRACER)
+    assert [(c.job, c.arrivals, c.payload_sha)
+            for c in off.completions] \
+        == [(c.job, c.arrivals, c.payload_sha) for c in on.completions]
+    assert obs.validate_trace(list(tr.events)) == []
+    assert {e["name"] for e in tr.events} >= {"serve.ingest",
+                                              "serve.queue_depth"}
+
+
+def test_serve_metrics_snapshot_is_published():
+    trace = poisson_multitenant_trace(4, 6, 32, s=8, rate=4.0,
+                                      extra_packets=2, seed=3)
+    rep = serve_trace(trace, slots=4, g_tick=4, batched=True)
+    m = rep.metrics["metrics"]
+    assert rep.metrics["schema"] == obs.METRICS_SCHEMA
+    assert m["serve.ticks"]["value"] == rep.ticks
+    assert m["serve.packets_ingested"]["value"] == rep.packets_ingested
+    assert m["serve.job_latency_s"]["count"] == len(rep.completions)
+    assert m["serve.queue_depth"]["count"] == rep.ticks
+
+
+def test_disabled_tracer_overhead_under_2pct_of_serve_smoke():
+    """The instrumentation bar: with tracing off, the per-call cost of
+    the no-op span/instant/counter paths, times the number of events a
+    traced smoke replay actually emits, must stay under 2% of that
+    replay's wall time."""
+    trace = poisson_multitenant_trace(6, 8, 64, s=8, rate=4.0,
+                                      extra_packets=3, seed=5)
+    serve_trace(trace, slots=4, g_tick=4, batched=True)   # jit warmup
+    off = serve_trace(trace, slots=4, g_tick=4, batched=True)
+
+    tr = obs.set_tracer(obs.Tracer())
+    try:
+        serve_trace(trace, slots=4, g_tick=4, batched=True)
+    finally:
+        obs.set_tracer(obs.NULL_TRACER)
+    n_events = len(tr.events)
+
+    null = obs.get_tracer()
+    n = 100_000
+    with obs.timed("overhead.null_span", tracer=None) as sw:
+        for _ in range(n):
+            with null.span("x", cat="t", i=0):
+                pass
+            null.instant("x")
+            null.counter("x", 1)
+    per_call = sw.dur_s / n            # one span + instant + counter
+    overhead = per_call * n_events
+    assert overhead < 0.02 * off.wall_s, (
+        f"no-op instrumentation {overhead * 1e6:.1f}us vs "
+        f"{off.wall_s * 1e3:.1f}ms replay ({n_events} events)")
+
+
+# ---------------------------------------------------------------------------
+# Grid: scenario-local tracing + spawn-context merge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_run_grid_jobs2_merges_worker_traces(tmp_path):
+    """run_grid(jobs=2) spawn workers each record into their own
+    tracer; the parent must merge the lanes into one valid trace with
+    one pid per worker and per-scenario per_stage breakdowns."""
+    from repro.grid import GridAxes, run_grid
+    pytest.importorskip("multiprocessing")
+    specs = GridAxes(strategy=("fednc_stream", "fedavg"),
+                     straggler=("exponential",), population=(300,),
+                     clients_per_round=8, rounds=2).expand()
+    path = tmp_path / "TRACE_grid.json"
+    results = run_grid(specs, jobs=2, trace_path=path)
+    assert len(results) == 2
+    for entry in results.values():
+        assert entry["per_stage"].get("sim.round", 0.0) > 0.0
+    events = obs.load_trace(path)
+    assert obs.validate_trace(events) == []
+    pids = {e["pid"] for e in events}
+    assert len(pids) == 2, f"expected one pid lane per worker: {pids}"
