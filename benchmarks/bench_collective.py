@@ -78,7 +78,7 @@ def run_hierarchy(json_path: str = "BENCH_hierarchy.json") -> dict:
             _hier_round(engine, P, edges, 1, fused, cfg)
             row[f"dispatches_{tag}"] = engine.dispatch_count - before
             row[f"us_{tag}"] = time_us(
-                lambda: _hier_round(engine, P, edges, 1, fused, cfg),
+                lambda f=fused: _hier_round(engine, P, edges, 1, f, cfg),
                 warmup=1, iters=3)
         row["dispatch_ratio"] = (row["dispatches_per_edge"] /
                                  max(row["dispatches_fused"], 1))

@@ -96,7 +96,8 @@ def _delay_sweep(rounds: int) -> dict:
     sweep["inflation_bar"] = DELAY_INFLATION_BAR
     sweep["exceeds_bar"] = bool(
         sweep["inflation"][-1] > DELAY_INFLATION_BAR)
-    for d, infl in zip(sweep["spreads"], sweep["inflation"]):
+    for d, infl in zip(sweep["spreads"], sweep["inflation"],
+                       strict=True):
         emit(f"grid_delay_spread{d:g}", 0.0,
              f"fedavg_inflation={infl:.3f}x_of_KHK")
     return sweep

@@ -54,7 +54,8 @@ def main() -> None:
             float(jnp.max(jnp.abs(a.astype(jnp.float32)
                                   - b.astype(jnp.float32))))
             for a, b in zip(jax.tree_util.tree_leaves(res.global_params),
-                            jax.tree_util.tree_leaves(ref.global_params))]
+                            jax.tree_util.tree_leaves(ref.global_params),
+                            strict=True)]
         print(f"max |FedNC - FedAvg| over all parameters: {max(diffs)} "
               "(bit-exact coding)")
     else:

@@ -248,7 +248,8 @@ def check_metrics_doc(name: str, doc, key: str = "metrics",
                                           "sum", "min", "max"), errors):
                 continue
             bounds, counts = m["bounds"], m["counts"]
-            if any(b >= a for b, a in zip(bounds, bounds[1:])) \
+            if any(b >= a for b, a in zip(bounds, bounds[1:],
+                                          strict=False)) \
                     or not bounds:
                 errors.append(f"{name}: {mk} bounds are not strictly "
                               "ascending")

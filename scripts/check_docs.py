@@ -31,7 +31,7 @@ sys.path.insert(0, str(ROOT / "src"))
 
 DOC_FILES = ("README.md", "docs/engine.md", "docs/simulator.md",
              "docs/grid.md", "docs/serving.md", "docs/observability.md",
-             "benchmarks/README.md")
+             "docs/analysis.md", "benchmarks/README.md")
 FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```\s*$",
                       re.MULTILINE | re.DOTALL)
 KERNEL_MARK_RE = re.compile(

@@ -1,0 +1,44 @@
+"""repro.analysis — fednc-lint + abstract kernel-contract checking.
+
+The measured-system claims (bit-exact decode, Prop. 1 ratios, serve
+throughput bars) rest on invariants that tests cannot efficiently
+cover: jit-safety in the hot path, one fenced timing idiom, seeded
+determinism, GF dtype discipline.  This package machine-checks them:
+
+* **fednc-lint** — AST rules FNC001–FNC005 over ``src``,
+  ``benchmarks``, ``examples`` and ``scripts`` with
+  ``# fednc: ignore[RULE] why`` suppressions (see
+  :mod:`repro.analysis.rules`);
+* **contracts** — ``jax.eval_shape`` of every registry kernel against
+  the declared shape/dtype contract plus seeded/materialized sibling
+  parity, zero device time (see :mod:`repro.analysis.contracts`).
+
+CLI: ``python -m repro.analysis [--json]`` — exit 0 iff clean; the
+JSON report follows the ``fednc-analysis-v1`` schema.  One-module
+use:
+
+>>> from repro import analysis
+>>> src = "import time\\nt = time.time()\\n"
+>>> findings, _ = analysis.analyze_source("src/repro/x.py", src)
+>>> findings[0].rule, findings[0].line
+('FNC001', 2)
+"""
+from .contracts import (DEFAULT_GRID, check_contracts,
+                        check_kernel_contracts,
+                        check_registry_docstring)
+from .findings import (ANALYSIS_SCHEMA, Finding, Suppression,
+                       apply_suppressions, parse_suppressions,
+                       report_document)
+from .rules import RULES, ModuleContext, Rule, register_rule, run_rules
+from .runner import (DEFAULT_PATHS, analyze_file, analyze_source,
+                     iter_python_files, run_analysis)
+
+__all__ = [
+    "ANALYSIS_SCHEMA", "DEFAULT_GRID", "DEFAULT_PATHS",
+    "Finding", "ModuleContext", "RULES", "Rule", "Suppression",
+    "analyze_file", "analyze_source", "apply_suppressions",
+    "check_contracts", "check_kernel_contracts",
+    "check_registry_docstring", "iter_python_files",
+    "parse_suppressions", "register_rule", "report_document",
+    "run_analysis", "run_rules",
+]

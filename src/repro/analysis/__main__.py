@@ -1,0 +1,57 @@
+"""CLI: ``python -m repro.analysis [--json PATH] [--root DIR]``.
+
+Exit 0 iff the repo lints clean (inline-justified suppressions
+excluded) AND every kernel in the engine registry passes its abstract
+contract.  ``--json`` additionally writes the ``fednc-analysis-v1``
+report (CI uploads it as an artifact beside the BENCH_/GRID_ files).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from .findings import Finding
+from .runner import DEFAULT_PATHS, run_analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="fednc-lint + kernel-contract checker")
+    ap.add_argument("--root", default=".",
+                    help="repo root to scan (default: cwd)")
+    ap.add_argument("--paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="roots to lint, relative to --root")
+    ap.add_argument("--json", nargs="?", const="ANALYSIS_report.json",
+                    default=None, metavar="PATH",
+                    help="write the fednc-analysis-v1 report "
+                         "(default path: ANALYSIS_report.json)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the kernel-contract pass (lint only; "
+                         "avoids importing jax)")
+    args = ap.parse_args(argv)
+
+    report = run_analysis(args.root, args.paths,
+                          contracts=not args.no_contracts)
+
+    for f in report["findings"]:
+        print(Finding(**f).render(), file=sys.stderr)
+    n_sup = len(report["suppressed"])
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.write_text(json.dumps(report, indent=2))
+        print(f"analysis: wrote {path}")
+    if report["ok"]:
+        print(f"analysis: OK ({report['files_scanned']} files, "
+              f"{report['contracts']['points_checked']} contract "
+              f"points, {n_sup} justified suppression(s))")
+        return 0
+    print(f"analysis: FAIL ({len(report['findings'])} finding(s))",
+          file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,239 @@
+"""analysis.contracts — abstract kernel-contract checking.
+
+Every GF kernel in ``repro.engine.registry`` promises the same
+contract: materialized kernels map ``(A (n,K) uint8, P (K,L) uint8)``
+to ``(n,L) uint8``; seeded kernels map ``(seeds (n,) uint32, P)`` to
+the same output.  PR 5 found (and fixed by hand) one registry/docs
+drift; this module checks the whole registry *statically* on every
+fast-tier run:
+
+* each kernel is ``jax.eval_shape``-d over a representative
+  ``(n, K, L, s)`` grid — abstract interpretation only, **zero device
+  time**, so a kernel whose output shape or dtype drifts (or that
+  crashes under trace on a packed-boundary L) is caught without
+  running a single kernel;
+* every ``*_seeded`` kernel must have its materialized sibling
+  registered (and vice-versa mapping must round-trip through
+  ``seeded_kernel_name`` / ``materialized_kernel_name``), and both
+  siblings must eval to identical output structure at every grid
+  point — the bit-exactness oracle's *precondition*;
+* the registry module docstring's kernel table must list exactly the
+  registered names (the drift PR 5 fixed by hand, pinned).
+
+Violations come back as :class:`~repro.analysis.findings.Finding`
+rows under dedicated rule ids so the CLI/report treats them uniformly
+with the lint half:
+
+``CTR001`` eval-shape contract violation (shape/dtype/trace error)
+``CTR002`` seeded/materialized sibling mismatch
+``CTR003`` registry docstring drift
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+from .findings import Finding
+
+#: representative (n, K, L, s) grid: generic point, packed-boundary L
+#: (non-multiple of the 4-symbol lane), exactly-one-tile L, tile+1
+#: padding path, L=0 early-out, and a sub-byte field
+DEFAULT_GRID: tuple[tuple[int, int, int, int], ...] = (
+    (3, 4, 17, 8),
+    (5, 8, 2048, 8),
+    (2, 6, 2049, 8),
+    (4, 3, 0, 8),
+    (3, 5, 33, 4),
+)
+
+_REGISTRY_FILE = "src/repro/engine/registry.py"
+
+
+def _contract_points(seeded: bool, grid) -> list[tuple]:
+    """[(args, kwargs, n, K, L, s)] eval_shape inputs per grid point."""
+    import jax
+    import jax.numpy as jnp
+
+    points = []
+    for (n, K, L, s) in grid:
+        P = jax.ShapeDtypeStruct((K, L), jnp.uint8)
+        if seeded:
+            first = jax.ShapeDtypeStruct((n,), jnp.uint32)
+        else:
+            first = jax.ShapeDtypeStruct((n, K), jnp.uint8)
+        points.append(((first, P), {"s": s}, n, K, L, s))
+    return points
+
+
+def _eval_shape(fn, args, kwargs) -> tuple[Optional[object], str]:
+    import functools
+
+    import jax
+
+    # kwargs (the static `s`) must stay Python values — eval_shape
+    # abstracts every argument it receives, so bind them first
+    try:
+        return jax.eval_shape(functools.partial(fn, **kwargs),
+                              *args), ""
+    except Exception as e:                        # noqa: BLE001
+        return None, f"{type(e).__name__}: {e}"
+
+
+def check_kernel_contracts(grid: Sequence[tuple] = DEFAULT_GRID,
+                           kernels: Optional[Sequence[str]] = None
+                           ) -> tuple[list[Finding], dict]:
+    """eval_shape every registry kernel against the declared contract.
+
+    Returns ``(violations, summary)`` where ``summary`` is the
+    ``contracts`` block of the ``fednc-analysis-v1`` report.  With no
+    violations the summary records which kernels and how many grid
+    points were checked — the fast tier asserts on it, so registry
+    drift cannot land silently.
+    """
+    import jax.numpy as jnp
+
+    from repro.engine import registry
+
+    names = list(kernels if kernels is not None
+                 else (n for n in registry.available_kernels()
+                       if n not in registry._ALIASES))
+    violations: list[Finding] = []
+    checked = 0
+    shapes: dict[str, list] = {}
+
+    for name in names:
+        seeded = registry.is_seeded_kernel(name)
+        try:
+            _, fn = registry.resolve_kernel(name)
+        except ValueError as e:
+            violations.append(Finding(
+                _REGISTRY_FILE, 1, 0, "CTR001", "error",
+                f"kernel {name!r}: {e}"))
+            continue
+        shapes[name] = []
+        for args, kwargs, n, K, L, s in _contract_points(seeded, grid):
+            point = f"(n={n}, K={K}, L={L}, s={s})"
+            out, err = _eval_shape(fn, args, kwargs)
+            checked += 1
+            if out is None:
+                violations.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR001", "error",
+                    f"kernel {name!r} failed abstract evaluation at "
+                    f"{point}: {err}"))
+                shapes[name].append(None)
+                continue
+            shapes[name].append((tuple(out.shape), str(out.dtype)))
+            if tuple(out.shape) != (n, L):
+                violations.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR001", "error",
+                    f"kernel {name!r} output shape {tuple(out.shape)} "
+                    f"!= contract (n, L) = {(n, L)} at {point}"))
+            if out.dtype != jnp.uint8:
+                violations.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR001", "error",
+                    f"kernel {name!r} output dtype {out.dtype} != "
+                    f"contract uint8 at {point}"))
+
+    violations.extend(_check_siblings(names, shapes))
+    summary = {
+        "kernels": sorted(n for n in shapes),
+        "grid": [list(p) for p in grid],
+        "points_checked": checked,
+        "violations": [v.to_json() for v in violations],
+    }
+    return violations, summary
+
+
+def _check_siblings(names: Sequence[str],
+                    shapes: dict[str, list]) -> list[Finding]:
+    """Seeded/materialized family consistency across the registry."""
+    from repro.engine import registry
+
+    out: list[Finding] = []
+    for name in names:
+        if registry.is_seeded_kernel(name):
+            if not name.endswith(registry.SEEDED_SUFFIX):
+                out.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR002", "error",
+                    f"seeded kernel {name!r} must carry the "
+                    f"'{registry.SEEDED_SUFFIX}' name suffix — the "
+                    f"engine's structural dispatch and the sibling "
+                    f"mapping both key on it"))
+                continue
+            base = name[: -len(registry.SEEDED_SUFFIX)]
+            mat = registry.materialized_kernel_name(name)
+            if base not in names:
+                out.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR002", "error",
+                    f"seeded kernel {name!r} has no materialized "
+                    f"sibling {base!r} in the registry — the "
+                    f"bit-exactness oracle (seeded output == "
+                    f"materialized output on expand_rows) has "
+                    f"nothing to check against"))
+            elif registry.seeded_kernel_name(mat) != name:
+                out.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR002", "error",
+                    f"sibling mapping does not round-trip: "
+                    f"materialized({name!r}) = {mat!r} but "
+                    f"seeded({mat!r}) = "
+                    f"{registry.seeded_kernel_name(mat)!r}"))
+            elif shapes.get(name) and shapes.get(mat) \
+                    and shapes[name] != shapes[mat]:
+                out.append(Finding(
+                    _REGISTRY_FILE, 1, 0, "CTR002", "error",
+                    f"siblings {name!r} / {mat!r} disagree on "
+                    f"abstract output over the contract grid: "
+                    f"{shapes[name]} != {shapes[mat]}"))
+        elif name.endswith(registry.SEEDED_SUFFIX):
+            out.append(Finding(
+                _REGISTRY_FILE, 1, 0, "CTR002", "error",
+                f"kernel {name!r} carries the seeded name suffix but "
+                f"was registered with seeded=False"))
+    return out
+
+
+_TABLE_NAME_RE = re.compile(r"``([\w]+)``")
+
+
+def check_registry_docstring() -> list[Finding]:
+    """The registry module docstring's kernel table == the registry.
+
+    The table between the first and last ``====`` rules in
+    ``repro.engine.registry.__doc__`` is the source-of-truth listing
+    PR 5 once found stale; every registered name (and no other) must
+    appear there in double backquotes.
+    """
+    from repro.engine import registry
+
+    doc = registry.__doc__ or ""
+    m = re.search(r"^=+ +=+$(.*?)^=+ +=+$", doc,
+                  re.MULTILINE | re.DOTALL)
+    if not m:
+        return [Finding(_REGISTRY_FILE, 1, 0, "CTR003", "error",
+                        "registry docstring has no kernel table "
+                        "(==== delimited)")]
+    documented = set(_TABLE_NAME_RE.findall(m.group(1)))
+    live = set(registry.available_kernels())
+    out: list[Finding] = []
+    for missing in sorted(live - documented):
+        out.append(Finding(
+            _REGISTRY_FILE, 1, 0, "CTR003", "error",
+            f"kernel {missing!r} is registered but missing from the "
+            f"registry docstring table"))
+    for stale in sorted(documented - live):
+        out.append(Finding(
+            _REGISTRY_FILE, 1, 0, "CTR003", "error",
+            f"registry docstring table lists {stale!r} which is not "
+            f"a registered kernel"))
+    return out
+
+
+def check_contracts(grid: Sequence[tuple] = DEFAULT_GRID
+                    ) -> tuple[list[Finding], dict]:
+    """The full static contract pass: eval_shape grid + siblings +
+    docstring.  Returns ``(violations, report_summary)``."""
+    violations, summary = check_kernel_contracts(grid)
+    doc = check_registry_docstring()
+    violations = violations + doc
+    summary["violations"] = [v.to_json() for v in violations]
+    return violations, summary

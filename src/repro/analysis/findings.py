@@ -1,0 +1,124 @@
+"""Findings, suppressions, and the ``fednc-analysis-v1`` report.
+
+A :class:`Finding` is one rule hit anchored to ``file:line``.  Call
+sites silence a *justified* exception with an inline marker on the
+flagged line::
+
+    t0 = time.perf_counter()   # fednc: ignore[FNC001] anchoring epoch offset
+
+The marker must name the rule id (several: ``ignore[FNC001,FNC002]``)
+and SHOULD carry a one-line justification after the bracket; the
+report keeps every suppression it honored, so "lints clean" is always
+auditable — an empty baseline means zero findings *and* every ignore
+is visible in the JSON artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+#: schema tag stamped into the JSON report document
+ANALYSIS_SCHEMA = "fednc-analysis-v1"
+
+_IGNORE_RE = re.compile(
+    r"#\s*fednc:\s*ignore\[([A-Z0-9,\s]+)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``file:line``.
+
+    >>> f = Finding("src/x.py", 3, 0, "FNC001", "error", "raw clock")
+    >>> f.location
+    'src/x.py:3'
+    """
+
+    file: str
+    line: int
+    col: int
+    rule: str
+    severity: str          # "error" | "warning"
+    message: str
+
+    @property
+    def location(self) -> str:
+        return f"{self.file}:{self.line}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """An honored inline ``# fednc: ignore[RULE]`` marker."""
+
+    file: str
+    line: int
+    rule: str
+    justification: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_suppressions(source: str) -> dict[int, tuple[set[str], str]]:
+    """``{line_number: (rule_ids, justification)}`` for a source text.
+
+    >>> sups = parse_suppressions(
+    ...     "x = 1\\ny = 2  # fednc: ignore[FNC001] epoch anchor\\n")
+    >>> sups[2]
+    ({'FNC001'}, 'epoch anchor')
+    """
+    out: dict[int, tuple[set[str], str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _IGNORE_RE.search(text)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = (rules, m.group(2).strip())
+    return out
+
+
+def apply_suppressions(
+    findings: Iterable[Finding],
+    suppressions: dict[int, tuple[set[str], str]],
+) -> tuple[list[Finding], list[Suppression]]:
+    """Split raw findings into (kept, suppressed-and-honored).
+
+    A marker suppresses a finding only when it sits on the finding's
+    own line and names the finding's rule id.
+    """
+    kept: list[Finding] = []
+    honored: list[Suppression] = []
+    for f in findings:
+        entry = suppressions.get(f.line)
+        if entry is not None and f.rule in entry[0]:
+            honored.append(Suppression(f.file, f.line, f.rule, entry[1]))
+        else:
+            kept.append(f)
+    return kept, honored
+
+
+def report_document(*, root: str, paths: list[str], files: int,
+                    findings: list[Finding],
+                    suppressed: list[Suppression],
+                    contracts: dict) -> dict:
+    """Assemble the ``fednc-analysis-v1`` JSON document."""
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "schema": ANALYSIS_SCHEMA,
+        "root": root,
+        "paths": paths,
+        "files_scanned": files,
+        "findings": [f.to_json() for f in findings],
+        "suppressed": [s.to_json() for s in suppressed],
+        "counts_by_rule": counts,
+        "contracts": contracts,
+        "ok": not findings and not contracts.get("violations"),
+    }

@@ -1,0 +1,92 @@
+"""Repo walking + the one-call entry points the CLI and tests share.
+
+``analyze_source`` lints one module text (how the test fixtures and
+docs examples drive individual rules); ``analyze_file`` wraps it for
+a path on disk; ``run_analysis`` walks the repo's code roots
+(``src``, ``benchmarks``, ``examples``, ``scripts``), applies every
+registered rule, runs the kernel-contract pass, and assembles the
+``fednc-analysis-v1`` report.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Optional, Sequence
+
+from .findings import (Finding, Suppression, apply_suppressions,
+                       parse_suppressions, report_document)
+from .rules import RULES, ModuleContext, Rule, run_rules
+
+#: repo-relative roots the lint half scans by default — tests stay
+#: out (fixtures deliberately violate rules), artifacts/docs are not
+#: Python
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "scripts")
+
+
+def analyze_source(rel: str, source: str,
+                   rules: Optional[dict[str, Rule]] = None
+                   ) -> tuple[list[Finding], list[Suppression]]:
+    """Lint one module given as text; returns (findings, suppressed).
+
+    ``rel`` is the repo-relative posix path the rules use for scoping
+    (e.g. FNC004 only applies under ``src/repro/sim`` etc.), so
+    fixtures can opt into any scope:
+
+    >>> bad = "import time\\nt0 = time.perf_counter()\\n"
+    >>> fs, _ = analyze_source("src/repro/sim/x.py", bad)
+    >>> [f.rule for f in fs]
+    ['FNC001']
+    """
+    ctx = ModuleContext.from_source(rel, source)
+    raw = run_rules(ctx, rules)
+    return apply_suppressions(raw, parse_suppressions(source))
+
+
+def analyze_file(path: pathlib.Path, root: pathlib.Path,
+                 rules: Optional[dict[str, Rule]] = None
+                 ) -> tuple[list[Finding], list[Suppression]]:
+    rel = path.relative_to(root).as_posix()
+    return analyze_source(rel, path.read_text(), rules)
+
+
+def iter_python_files(root: pathlib.Path,
+                      paths: Sequence[str] = DEFAULT_PATHS
+                      ) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for sub in paths:
+        base = root / sub
+        if not base.exists():
+            continue
+        files.extend(sorted(base.rglob("*.py")))
+    return files
+
+
+def run_analysis(root, paths: Sequence[str] = DEFAULT_PATHS, *,
+                 contracts: bool = True,
+                 rules: Optional[dict[str, Rule]] = None) -> dict:
+    """Lint + contract-check the repo; returns the report document.
+
+    ``report["ok"]`` is the single gate bit: True iff zero lint
+    findings (inline-justified suppressions excluded — but recorded)
+    and zero contract violations.
+    """
+    root = pathlib.Path(root).resolve()
+    findings: list[Finding] = []
+    suppressed: list[Suppression] = []
+    files = iter_python_files(root, paths)
+    for path in files:
+        f, s = analyze_file(path, root, rules)
+        findings.extend(f)
+        suppressed.extend(s)
+
+    if contracts:
+        from .contracts import check_contracts
+        violations, summary = check_contracts()
+        findings.extend(violations)
+    else:
+        summary = {"kernels": [], "points_checked": 0,
+                   "violations": []}
+
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return report_document(
+        root=str(root), paths=list(paths), files=len(files),
+        findings=findings, suppressed=suppressed, contracts=summary)

@@ -106,10 +106,11 @@ def _aggregate(P_hat: jnp.ndarray, spec: pkt.PacketSpec,
         trees = [jax.tree_util.tree_map(lambda x, k=k: x[k], stacked)
                  for k in range(K)]
         trees = [pkt.dequantize_pytree(t, qs)
-                 for t, qs in zip(trees, qspecs)]
+                 for t, qs in zip(trees, qspecs, strict=True)]
         return jax.tree_util.tree_map(
             lambda *xs: sum(
-                wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
+                wk * jnp.asarray(x, jnp.float32)
+                for wk, x in zip(w, xs, strict=True)
             ).astype(xs[0].dtype),
             *trees,
         )
@@ -200,7 +201,8 @@ def fedavg_round(client_params: Sequence[Any], weights: Sequence[float],
     w = w / w.sum()
     agg = jax.tree_util.tree_map(
         lambda *xs: sum(
-            wk * jnp.asarray(x, jnp.float32) for wk, x in zip(w, xs)
+            wk * jnp.asarray(x, jnp.float32)
+            for wk, x in zip(w, xs, strict=True)
         ).astype(xs[0].dtype),
         *client_params,
     )

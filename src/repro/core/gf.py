@@ -140,8 +140,13 @@ def xor_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
 
 @functools.lru_cache(maxsize=None)
 def get_field(s: int) -> GF:
+    # The first call may happen inside a jit / eval_shape trace (the
+    # contract checker abstractly evaluates every registry kernel);
+    # without escaping the trace, jnp.asarray would return tracers and
+    # the lru_cache would leak them into every later concrete call.
     exp, log = _build_tables(s)
-    return GF(s=s, exp=jnp.asarray(exp), log=jnp.asarray(log))
+    with jax.ensure_compile_time_eval():
+        return GF(s=s, exp=jnp.asarray(exp), log=jnp.asarray(log))
 
 
 # ---------------------------------------------------------------------------

@@ -122,7 +122,7 @@ def packet_to_pytree(packet: jnp.ndarray, spec: PacketSpec):
     b = symbols_to_bytes(packet, spec.s)[: spec.n_bytes]
     leaves = []
     off = 0
-    for shape, dtype in zip(spec.shapes, spec.dtypes):
+    for shape, dtype in zip(spec.shapes, spec.dtypes, strict=True):
         n = int(np.prod(shape, dtype=np.int64)) if shape else 1
         nbytes = n * jnp.dtype(dtype).itemsize
         leaves.append(_bytes_to_leaf(b[off: off + nbytes], shape, dtype))
@@ -185,7 +185,7 @@ def packets_to_pytrees(P_hat: jnp.ndarray, spec: PacketSpec):
     b = b[:, : spec.n_bytes]
     leaves = []
     off = 0
-    for shape, dtype in zip(spec.shapes, spec.dtypes):
+    for shape, dtype in zip(spec.shapes, spec.dtypes, strict=True):
         n = int(np.prod(shape, dtype=np.int64)) if shape else 1
         nbytes = n * jnp.dtype(dtype).itemsize
         leaves.append(jax.vmap(
@@ -276,6 +276,7 @@ def dequantize_pytree(qtree, qspec: QuantSpec):
     leaves, treedef = jax.tree_util.tree_flatten(qtree)
     out = [
         jnp.asarray(q, jnp.float32) * s + z
-        for q, s, z in zip(leaves, qspec.scales, qspec.zeros)
+        for q, s, z in zip(leaves, qspec.scales, qspec.zeros,
+                           strict=True)
     ]
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -42,7 +42,7 @@ def simulate_error_probability(K: int, s: int, eta: int, trials: int,
 
     rng = np.random.default_rng(seed)
     failures = 0
-    for t in range(trials):
+    for _ in range(trials):
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
         A = random_coding_matrix(key, K, K, s)
         # packets irrelevant for rank statistics; 1-symbol payload

@@ -89,10 +89,16 @@ class EngineRound:
     report: Any = None               # ChannelReport when a channel ran
 
 
+#: shared default so signatures avoid calls in argument defaults
+#: (ruff B008) and `get_engine()` == `get_engine(EngineConfig())` in
+#: the lru_cache
+_DEFAULT_CONFIG = EngineConfig()
+
+
 class CodingEngine:
     """Owns the full RLNC pipeline for one EngineConfig (+ optional mesh)."""
 
-    def __init__(self, config: EngineConfig = EngineConfig(),
+    def __init__(self, config: EngineConfig = _DEFAULT_CONFIG,
                  mesh: Any = None):
         self.config = config
         self.mesh = mesh
@@ -633,7 +639,7 @@ class CodingEngine:
 
 
 @functools.lru_cache(maxsize=None)
-def get_engine(config: EngineConfig = EngineConfig()) -> CodingEngine:
+def get_engine(config: EngineConfig = _DEFAULT_CONFIG) -> CodingEngine:
     """Process-wide engine cache keyed by (hashable) EngineConfig.
 
     Meshed engines are not cached (Mesh is unhashable); construct

@@ -94,6 +94,26 @@ def register_kernel(name: str, fn: KernelFn, *,
     return fn
 
 
+def unregister_kernel(name: str) -> None:
+    """Remove a custom backend registered with :func:`register_kernel`.
+
+    Exists so tests (e.g. the contract checker's doctored-kernel
+    cases) can restore the process-global registry; unknown names
+    raise, aliases cannot be removed.
+
+    >>> unregister_kernel("auto")
+    Traceback (most recent call last):
+        ...
+    ValueError: 'auto' is a reserved alias
+    """
+    if name in _ALIASES:
+        raise ValueError(f"{name!r} is a reserved alias")
+    if name not in _KERNELS:
+        raise ValueError(f"kernel {name!r} is not registered")
+    del _KERNELS[name]
+    _SEEDED.discard(name)
+
+
 def available_kernels() -> tuple[str, ...]:
     return tuple(sorted(_KERNELS)) + _ALIASES
 

@@ -116,6 +116,7 @@ def run_async_experiment(exp: FLExperiment, init_params: Any,
             if (t + 1) % eval_every == 0:
                 acc = exp.eval_fn(global_params, exp.test_set.images,
                                   exp.test_set.labels)
+            sw.fence((global_params, acc))
         logs.append(AsyncRoundLog(t, bool(result.decoded),
                                   result.n_aggregated, int(consumed),
                                   float(sim_time), loss, acc,

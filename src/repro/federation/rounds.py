@@ -65,6 +65,7 @@ def train_cohort(exp: FLExperiment, rng: np.random.Generator,
         with obs.timed("fl.local_train", cat="fl",
                        client=int(k)) as sw:
             p_k, loss_k = exp.trainer.train(global_params, it)
+            sw.fence(p_k)        # measured walls feed ComputeModel
         walls.append(sw.dur_s)
         client_params.append(p_k)
         losses.append(loss_k)
@@ -93,6 +94,7 @@ def run_experiment(exp: FLExperiment, init_params: Any, rounds: int,
             if (t + 1) % eval_every == 0:
                 acc = exp.eval_fn(global_params, exp.test_set.images,
                                   exp.test_set.labels)
+            sw.fence((global_params, acc))
         logs.append(RoundLog(t, bool(result.decoded), result.n_aggregated,
                              loss, acc, sw.dur_s))
         if verbose:

@@ -41,7 +41,8 @@ class FedAvgStrategy:
             agg = jax.tree_util.tree_map(
                 lambda *xs: sum(
                     wk * jnp.asarray(x, jnp.float32)
-                    for wk, x in zip(w, xs)).astype(xs[0].dtype),
+                    for wk, x in zip(w, xs,
+                                     strict=True)).astype(xs[0].dtype),
                 *chosen)
             distinct = len(set(draws.tolist()))
             from repro.core.channel import ChannelReport

@@ -224,7 +224,8 @@ def _merge_metric(name: str, a: dict, b: dict) -> dict:
                              "— merge would be approximate")
         return {"type": t, "bounds": list(a["bounds"]),
                 "counts": [x + y for x, y in zip(a["counts"],
-                                                b["counts"])],
+                                                b["counts"],
+                                                strict=True)],
                 "count": a["count"] + b["count"],
                 "sum": a["sum"] + b["sum"],
                 "min": _opt(min, a["min"], b["min"]),

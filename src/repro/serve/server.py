@@ -278,7 +278,7 @@ def serve_trace(trace: ServeTrace, *, slots: int = 8,
             for p, i in enumerate(idx):
                 rows_at[int(i)] = A[p]
     offered = 0
-    with obs.timed("serve.trace", cat="serve",
+    with obs.timed("serve.trace", cat="serve",  # fednc: ignore[FNC002] every tick() reads ranks/payloads to host, so the region is fenced by construction
                    jobs=trace.n_jobs) as sw:
         for i in range(trace.n_packets):
             j = int(trace.job_of[i])

@@ -83,7 +83,8 @@ class ClientPopulation:
             want = max(2 * (k - len(chosen)) + 8, 16)
             cand = rng.integers(0, N, size=want)
             online = rng.random(want) >= p_churn
-            for c, ok in zip(cand.tolist(), online.tolist()):
+            for c, ok in zip(cand.tolist(), online.tolist(),
+                             strict=True):
                 if c in seen:
                     continue
                 seen.add(c)

@@ -125,10 +125,13 @@ class SimTrace:
         return out
 
 
+_DEFAULT_CONFIG = SimConfig()    # shared default (ruff B008)
+
+
 class NetworkSimulator:
     """Event-driven FL network simulation for one SimConfig."""
 
-    def __init__(self, config: SimConfig = SimConfig()):
+    def __init__(self, config: SimConfig = _DEFAULT_CONFIG):
         self.config = config
         self.population = ClientPopulation(config.population,
                                            seed=config.seed)

@@ -34,7 +34,7 @@ def test_cnn_learns_synthetic_classes():
         return params, state, loss
 
     losses = []
-    for i, (x, y) in enumerate(batches(ds, 64, epochs=4, seed=1)):
+    for x, y in batches(ds, 64, epochs=4, seed=1):
         params, state, loss = step(params, state, jnp.asarray(x),
                                    jnp.asarray(y))
         losses.append(float(loss))

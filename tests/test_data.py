@@ -63,7 +63,7 @@ def test_token_stream_plants_structure():
     big = ts.sample(64, 256)
     pairs = {}
     for row in big:
-        for a, b2 in zip(row[:-1], row[1:]):
+        for a, b2 in zip(row[:-1], row[1:], strict=True):
             pairs.setdefault(int(a), []).append(int(b2))
     frac_planted = np.mean([
         len(set(v)) < 40 for v in pairs.values() if len(v) >= 8])

@@ -138,7 +138,7 @@ def _close(x, y, path="") -> None:
             _close(x[k], y[k], f"{path}/{k}")
     elif isinstance(x, list):
         assert len(x) == len(y), path
-        for i, (a, b) in enumerate(zip(x, y)):
+        for i, (a, b) in enumerate(zip(x, y, strict=True)):
             _close(a, b, f"{path}[{i}]")
     elif isinstance(x, float):
         assert x == pytest.approx(y, rel=1e-9), path

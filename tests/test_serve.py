@@ -221,7 +221,7 @@ def test_ticks_do_not_cross_contaminate_slots():
     srv.drain()
     assert srv.completion(0) is not None
     np.testing.assert_array_equal(srv.result(0), P0)
-    for (B_before, r_before), j in zip(frozen, (1, 2)):
+    for (B_before, r_before), j in zip(frozen, (1, 2), strict=True):
         np.testing.assert_array_equal(
             np.asarray(srv.bank.basis(j)), B_before)
         assert np.asarray(srv.bank.rank)[j] == r_before

@@ -32,9 +32,10 @@ def test_fednc_round_on_transformer_params():
                             FedNCConfig(s=8), jax.random.PRNGKey(5))
     ref = fednc.fedavg_round(clients, [1, 1, 1], clients[0])
     assert res.decoded
-    for (p1, l1), (p2, l2) in zip(
+    for (_p1, l1), (_p2, l2) in zip(
             jax.tree_util.tree_leaves_with_path(res.global_params),
-            jax.tree_util.tree_leaves_with_path(ref.global_params)):
+            jax.tree_util.tree_leaves_with_path(ref.global_params),
+            strict=True):
         np.testing.assert_array_equal(np.asarray(l1, np.float32),
                                       np.asarray(l2, np.float32))
 
@@ -74,7 +75,8 @@ def test_checkpoint_roundtrip():
         save_pytree(path, params, metadata={"arch": cfg.name})
         back = load_pytree(path, params)
         for l1, l2 in zip(jax.tree_util.tree_leaves(params),
-                          jax.tree_util.tree_leaves(back)):
+                          jax.tree_util.tree_leaves(back),
+                          strict=True):
             np.testing.assert_array_equal(
                 np.asarray(l1, np.float32), np.asarray(l2, np.float32))
 
@@ -125,7 +127,8 @@ def test_train_step_integration_reduced():
     # the coded aggregations decode to the plain mean -> same update
     l_plain = jax.tree_util.tree_leaves(outs["plain"])
     for mode in ("fednc_naive", "fednc_blocked"):
-        for a, b in zip(l_plain, jax.tree_util.tree_leaves(outs[mode])):
+        for a, b in zip(l_plain, jax.tree_util.tree_leaves(outs[mode]),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32),
                                        rtol=2e-2, atol=2e-3)
