@@ -6,9 +6,11 @@ Four sections, one ``GRID_grid.json`` (+ ``GRID_grid.md`` summary):
   x four straggler profiles x populations 10^3/10^4, the stages
   decoder at 10^4, a 10%-dropout cell (FedAvg blocked, FedNC decoding
   survivors), the Section-III hierarchy at E in {2, 4, 8} over both
-  the table-oracle and lane-packed GF kernels, and the async FL
-  strategies.  Per-scenario seeds come from ``repro.grid.spec`` and
-  never change as the grid grows.
+  the table-oracle and lane-packed GF kernels, the async FL
+  strategies, and the adversary axis (eavesdrop / collude / byzantine
+  engine cells + an edge-link tap on the hierarchy).  Per-scenario
+  seeds come from ``repro.grid.spec`` and never change as the grid
+  grows.
 * **delay_sweep** — the ROADMAP's delay-reordered regime: per-client
   latency offsets reorder arrivals, breaking the blind-box i.i.d.
   assumption Prop. 1 prices at K·H(K).  The sweep publishes measured
@@ -69,6 +71,20 @@ def _axes_list(rounds: int, fast: bool) -> list[GridAxes]:
         GridAxes(strategy=("async", "async_compute"),
                  straggler=("lognormal",), clients_per_round=4,
                  rounds=2 if fast else 4),
+        # the adversary axis: passive interception / collusion /
+        # byzantine corruption against the flat engine round, plus the
+        # edge-link tap against the §III hierarchy (BENCH_security.json
+        # carries the closed-form validation; these cells put the same
+        # models on the grid's coordinates)
+        GridAxes(strategy=("engine",),
+                 kernel=("jnp_packed",) if fast
+                 else ("jnp_packed", "jnp_packed_seeded"),
+                 adversary=("eavesdrop:0.6", "collude:4",
+                            "byzantine:0.05"),
+                 clients_per_round=16, rounds=2 if fast else 4),
+        GridAxes(strategy=("hier:4",), kernel=("jnp_packed",),
+                 adversary=("eavesdrop:0.6",),
+                 clients_per_round=16, rounds=2 if fast else 3),
     ]
     return blocks
 

@@ -1,0 +1,241 @@
+"""Security benchmark: the paper's "Secure" claim, measured.
+
+Four sections, one ``BENCH_security.json``:
+
+* **eavesdrop_edge_sweep** — the structural rank wall (paper
+  §III-A.2): an attacker capturing every row of e < E edge links of a
+  hierarchical round holds coding vectors supported on < K columns, so
+  its basis can never reach rank K.  The sweep records achieved rank
+  vs. number of tapped edges; the bar is *zero* full leaks below full
+  capture and a guaranteed full leak at e = E.
+* **leak_probability** — the probabilistic wall for per-tuple
+  interception: each of the n transmitted tuples is captured
+  independently with probability p, and the measured full-leak rate
+  over Monte-Carlo trials must match the closed form
+  ``core.security.eavesdropper_leak_probability`` (a binomial mixture
+  of full-rank probabilities) within a 5-sigma binomial tolerance.
+  Colluding-client entries reuse the same closed form with K-c
+  unknowns: c colluders quotient their own packets out of the space.
+  Every trial with fewer than K independent rows is also asserted to
+  not leak (``rank_wall_violations`` must stay 0).
+* **byzantine_detection** — active corruption at rate b per tuple
+  (``adversary.ByzantineChannel``, mode "both") against the engine's
+  redundant-rank cross-check (``round(verify=True)``): corrupted
+  rounds must be flagged (detection_rate >= 0.99 at the full tier), an
+  accepted-but-wrong decode (``undetected_bad_decodes``) must never
+  happen, and ``rounds_to_recovery`` prices the retry loop.
+* **replay_detection** — the seeded wire format's own attack: re-sent
+  4-byte headers with forged payloads arrive as dependent rows whose
+  payloads contradict the basis, so ``StreamDecoder(detect=True)``
+  must flag every single one.
+
+``scripts/check_bench.py`` enforces the bars; ``--smoke`` writes
+``BENCH_security_smoke.json`` (``config.smoke`` true) with the
+full-tier-only bars relaxed, mirroring ``bench_serve``.
+
+    PYTHONPATH=src python -m benchmarks.bench_security [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.adversary import (ByzantineChannel, EavesdropperView,
+                             replayed_seed_batch, rounds_to_recovery,
+                             tap_edges)
+from repro.core.security import eavesdropper_leak_probability
+from repro.engine import CodingEngine, EngineConfig, StreamDecoder
+
+from .common import emit
+
+K = 8            # generation size for the flat (engine) sections
+L = 64           # payload symbols per packet
+S = 8
+N_TUPLES = 12    # transmitted coded tuples per round (K + redundancy)
+EDGES = 4        # hierarchy width for the edge sweep
+EDGE_CLIENTS = 4     # clients per edge (hierarchy K = EDGES * this)
+SPARE_PER_EDGE = 1
+LEAK_PS = (0.5, 0.7, 0.9)
+COLLUDERS = 3
+BYZ_RATES = (0.02, 0.05, 0.1)
+SEED = 13
+
+FULL = {"edge_trials": 20, "leak_trials": 600, "byz_rounds": 24,
+        "replays": 12}
+SMOKE = {"edge_trials": 6, "leak_trials": 120, "byz_rounds": 6,
+         "replays": 6}
+
+
+def _edge_sweep(engine: CodingEngine, trials: int) -> dict:
+    """Achieved rank vs. number of tapped edge links."""
+    k = EDGES * EDGE_CLIENTS
+    edges = [tuple(range(e * EDGE_CLIENTS, (e + 1) * EDGE_CLIENTS))
+             for e in range(EDGES)]
+    n_out = [len(ids) + SPARE_PER_EDGE for ids in edges]
+    entries = []
+    for tapped in range(EDGES + 1):
+        ranks, leaks = [], 0
+        for t in range(trials):
+            key = jax.random.PRNGKey(SEED * 1000 + t)
+            A = engine.multi_edge_coding_matrix(key, edges, k, n_out)
+            view = EavesdropperView(K=k, s=S, seed=t)
+            view.observe(tap_edges(A, edges, range(tapped),
+                                   spare_per_edge=SPARE_PER_EDGE))
+            ranks.append(view.rank)
+            leaks += int(view.full_leak)
+        entries.append({
+            "tapped_edges": tapped,
+            "rank_mean": float(np.mean(ranks)),
+            "rank_max": int(np.max(ranks)),
+            "full_leak_rate": leaks / trials,
+        })
+        emit(f"security_edge_tap{tapped}of{EDGES}", 0.0,
+             f"rank_mean={entries[-1]['rank_mean']:.2f};"
+             f"leak_rate={entries[-1]['full_leak_rate']:.2f}")
+    return {"edges": EDGES, "K": k, "spare_per_edge": SPARE_PER_EDGE,
+            "trials": trials, "entries": entries}
+
+
+def _leak_point(engine: CodingEngine, p: float, colluders: int,
+                trials: int) -> dict:
+    """Measured full-leak rate vs. the closed form at one (p, c)."""
+    leaks = violations = 0
+    cids = tuple(range(colluders))
+    for t in range(trials):
+        key = jax.random.PRNGKey(SEED * 7000 + t)
+        A = engine.coding_matrix(key, N_TUPLES, K)
+        view = EavesdropperView(K=K, s=S, seed=t, p_intercept=p,
+                                colluders=cids)
+        view.intercept(A)
+        leaks += int(view.full_leak)
+        if view.intercepted + colluders < K and view.full_leak:
+            violations += 1    # impossible: < K rows spanned K dims
+    measured = leaks / trials
+    closed = eavesdropper_leak_probability(N_TUPLES, K - colluders,
+                                           p, s=S)
+    tol = 5.0 * math.sqrt(max(closed * (1 - closed), 1e-12) / trials)
+    entry = {
+        "n": N_TUPLES, "K": K, "colluders": colluders,
+        "p_intercept": p, "trials": trials, "measured": measured,
+        "closed_form": closed, "abs_err": abs(measured - closed),
+        "tol": tol, "rank_wall_violations": violations,
+    }
+    emit(f"security_leak_p{p:g}_c{colluders}", 0.0,
+         f"measured={measured:.4f};closed={closed:.4f};tol={tol:.4f}")
+    return entry
+
+
+def _byzantine_point(engine: CodingEngine, rate: float,
+                     rounds: int) -> dict:
+    """Detection + recovery stats for one corruption rate."""
+    P = jax.random.randint(jax.random.PRNGKey(SEED), (K, L), 0, 256,
+                           dtype=jax.numpy.uint8)
+    channel = ByzantineChannel(rate, seed=SEED, mode="both")
+    corrupted = flagged = rank_failures = undetected = accepted = 0
+    for r in range(rounds):
+        before = channel.corrupted
+        out = engine.round(P, jax.random.fold_in(
+            jax.random.PRNGKey(SEED + 1), r), channel, verify=True)
+        hit = channel.corrupted > before
+        corrupted += int(hit)
+        if not out.ok:
+            rank_failures += 1
+        elif out.verified is False:
+            flagged += 1
+        else:
+            accepted += 1
+            if hit and not bool((out.packets == P).all()):
+                undetected += 1
+    detected = flagged + rank_failures
+    recovery = rounds_to_recovery(
+        engine, P, jax.random.PRNGKey(SEED + 2), channel)
+    entry = {
+        "rate": rate, "rounds": rounds,
+        "corrupted_rounds": corrupted, "detected": detected,
+        "detection_rate": (detected / corrupted if corrupted else 1.0),
+        "flagged": flagged, "rank_failures": rank_failures,
+        "accepted": accepted, "undetected_bad_decodes": undetected,
+        "recovery": recovery,
+    }
+    emit(f"security_byzantine_b{rate:g}", 0.0,
+         f"corrupted={corrupted}/{rounds};"
+         f"detection={entry['detection_rate']:.2f};"
+         f"recovery_rounds={recovery['rounds']}")
+    return entry
+
+
+def _replay(engine_seeded: CodingEngine, replays: int) -> dict:
+    """Every replayed 4-byte header must be flagged by the decoder."""
+    P = jax.random.randint(jax.random.PRNGKey(SEED), (K, L), 0, 256,
+                           dtype=jax.numpy.uint8)
+    seeds = engine_seeded.coding_seeds(jax.random.PRNGKey(SEED + 3),
+                                       N_TUPLES)
+    batch = engine_seeded.encode_seeded(P, seeds)
+    attacked = replayed_seed_batch(batch, replays, s=S, seed=SEED)
+    dec = StreamDecoder(K=K, L=L, s=S, detect=True)
+    dec.ingest(attacked.seeds, attacked.C)
+    entry = {
+        "replays": replays, "flagged": dec.inconsistent,
+        "first_inconsistent_at": dec.first_inconsistent_at,
+        "decoded": bool(dec.complete),
+    }
+    emit("security_replay", 0.0,
+         f"replays={replays};flagged={dec.inconsistent}")
+    return entry
+
+
+def run(fast: bool = False, smoke: bool = False,
+        json_path: str = "BENCH_security.json") -> dict:
+    knobs = SMOKE if smoke else dict(
+        FULL, leak_trials=300 if fast else FULL["leak_trials"],
+        byz_rounds=12 if fast else FULL["byz_rounds"])
+    engine = CodingEngine(EngineConfig(
+        s=S, kernel="jnp_packed", extra_tuples=N_TUPLES - K))
+    engine_seeded = CodingEngine(EngineConfig(
+        s=S, kernel="jnp_packed_seeded", extra_tuples=N_TUPLES - K))
+
+    leak_entries = [_leak_point(engine, p, 0, knobs["leak_trials"])
+                    for p in LEAK_PS]
+    leak_entries.append(_leak_point(engine, 0.5, COLLUDERS,
+                                    knobs["leak_trials"]))
+
+    results = {
+        "config": {
+            "K": K, "L": L, "s": S, "n_tuples": N_TUPLES,
+            "seed": SEED, "smoke": bool(smoke), **knobs,
+        },
+        "eavesdrop_edge_sweep": _edge_sweep(engine,
+                                            knobs["edge_trials"]),
+        "leak_probability": {"trials": knobs["leak_trials"],
+                             "entries": leak_entries},
+        "byzantine_detection": {
+            "rounds": knobs["byz_rounds"], "mode": "both",
+            "entries": [_byzantine_point(engine, b, knobs["byz_rounds"])
+                        for b in BYZ_RATES],
+        },
+        "replay_detection": _replay(engine_seeded, knobs["replays"]),
+    }
+    pathlib.Path(json_path).write_text(json.dumps(results, indent=2))
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trial counts, full-tier bars relaxed")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    path = args.json or ("BENCH_security_smoke.json" if args.smoke
+                         else "BENCH_security.json")
+    print("name,us_per_call,derived")
+    run(fast=args.fast, smoke=args.smoke, json_path=path)
+
+
+if __name__ == "__main__":
+    main()

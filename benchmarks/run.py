@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_serve              multi-tenant decode server: continuous
                            batching vs per-job dispatch, packets/s +
                            p50/p99 job latency (BENCH_serve.json)
+  bench_security           the adversary models vs the closed forms:
+                           edge-tap rank wall, eavesdropper leak
+                           probability, byzantine detection + replay
+                           flagging (BENCH_security.json)
 
 See benchmarks/README.md for every suite and JSON field.
 """
@@ -42,7 +46,8 @@ def main() -> None:
     from . import (bench_collective, bench_coupon,
                    bench_error_probability, bench_fl_accuracy,
                    bench_grid, bench_kernels, bench_robustness,
-                   bench_scale, bench_serve, bench_sim)
+                   bench_scale, bench_security, bench_serve,
+                   bench_sim)
 
     suites = [
         ("error_probability",
@@ -60,6 +65,7 @@ def main() -> None:
         ("sim", lambda: bench_sim.run(rounds=40 if args.fast else 100)),
         ("grid", lambda: bench_grid.run(fast=args.fast)),
         ("serve", lambda: bench_serve.run(fast=args.fast)),
+        ("security", lambda: bench_security.run(fast=args.fast)),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -19,7 +19,13 @@ machine-readable ``BENCH_*.json`` artifacts the same treatment:
    CPU wall clock, and the decode server's continuous batching ≥ 1.5x
    sequential per-job ingest at ≥ 8 concurrent jobs with byte-identical
    payloads (``BENCH_serve.json``; ``BENCH_serve_*.json`` smoke
-   artifacts are schema-checked with the bar relaxed).
+   artifacts are schema-checked with the bar relaxed), and the
+   security bars (``BENCH_security.json``): zero full leaks below
+   full edge capture, measured leak probability within its binomial
+   tolerance of the closed form, byzantine detection ≥ 0.99 with zero
+   undetected bad decodes, every replayed seed header flagged
+   (``BENCH_security_*.json`` smoke artifacts relax the full-tier
+   detection/recovery bars only).
 
 The scenario-grid artifacts (``GRID_*.json``, schema
 ``fednc-grid-v1`` from ``repro.grid``) get the same treatment:
@@ -28,8 +34,10 @@ exist and carry the delay-reordered sweep (FedAvg inflation beyond
 K·H(K) above its bar) and the compute-coupling section (coupled decode
 clock strictly dominating the network-only schedule); any other
 ``GRID_*.json`` in the root (e.g. the CI smoke artifact) is
-schema-checked too — axes, per-scenario seed, draw-ratio fields, and
-the per-scenario ``per_stage`` wall breakdown from ``repro.obs``.
+schema-checked too — axes (including the ``adversary`` coordinate),
+per-scenario seed, draw-ratio fields, and the per-scenario
+``per_stage`` wall breakdown from ``repro.obs``; ``GRID_smoke.json``
+must additionally carry >= 2 active-adversary cells.
 
 Observability artifacts ride the same gate: ``BENCH_serve*.json``
 must embed a valid ``fednc-metrics-v1`` snapshot (queue-depth gauge,
@@ -358,9 +366,118 @@ def check_serve(name: str, data: dict) -> list[str]:
     return errors
 
 
+#: byzantine detection must flag at least this share of corrupted
+#: rounds (full tier; the rest are rank failures, also rejections)
+SECURITY_DETECTION_BAR = 0.99
+
+
+def check_security(name: str, data: dict) -> list[str]:
+    errors: list[str] = []
+    cfg = data.get("config")
+    if cfg is None:
+        return [f"{name}: missing 'config'"]
+    smoke = bool(cfg.get("smoke"))
+    K = cfg.get("K")
+
+    sweep = data.get("eavesdrop_edge_sweep")
+    if sweep is None:
+        errors.append(f"{name}: missing 'eavesdrop_edge_sweep'")
+    elif _require(name, sweep, "eavesdrop_edge_sweep",
+                  ("edges", "K", "trials", "entries"), errors):
+        for e in sweep["entries"]:
+            key = f"edge_sweep[tapped={e.get('tapped_edges')}]"
+            if not _require(name, e, key,
+                            ("tapped_edges", "rank_mean", "rank_max",
+                             "full_leak_rate"), errors):
+                continue
+            if e["tapped_edges"] < sweep["edges"]:
+                # the structural rank wall: < E edge links span < K
+                # columns, so a full leak is *impossible*, not unlikely
+                if e["full_leak_rate"] > 0 or e["rank_max"] >= sweep["K"]:
+                    errors.append(
+                        f"{name}: {key} leaked (rank_max="
+                        f"{e['rank_max']}, K={sweep['K']}) below full "
+                        "edge capture")
+            elif e["full_leak_rate"] < 1.0:
+                errors.append(f"{name}: {key} full edge capture only "
+                              f"leaked {e['full_leak_rate']:.2f} of "
+                              "trials (want 1.0)")
+
+    leak = data.get("leak_probability")
+    if leak is None:
+        errors.append(f"{name}: missing 'leak_probability'")
+    elif not leak.get("entries"):
+        errors.append(f"{name}: leak_probability has no entries")
+    else:
+        for e in leak["entries"]:
+            key = (f"leak[p={e.get('p_intercept')},"
+                   f"c={e.get('colluders')}]")
+            if not _require(name, e, key,
+                            ("n", "K", "colluders", "p_intercept",
+                             "measured", "closed_form", "abs_err",
+                             "tol", "rank_wall_violations"), errors):
+                continue
+            if e["rank_wall_violations"] != 0:
+                errors.append(f"{name}: {key} reported "
+                              f"{e['rank_wall_violations']} trials "
+                              "leaking below K independent rows")
+            if e["abs_err"] > e["tol"]:
+                errors.append(
+                    f"{name}: {key} measured leak {e['measured']:.4f} "
+                    f"is {e['abs_err']:.4f} from the closed form "
+                    f"{e['closed_form']:.4f} (tol {e['tol']:.4f})")
+
+    byz = data.get("byzantine_detection")
+    if byz is None:
+        errors.append(f"{name}: missing 'byzantine_detection'")
+    elif not byz.get("entries"):
+        errors.append(f"{name}: byzantine_detection has no entries")
+    else:
+        for e in byz["entries"]:
+            key = f"byzantine[rate={e.get('rate')}]"
+            if not _require(name, e, key,
+                            ("rate", "rounds", "corrupted_rounds",
+                             "detected", "detection_rate",
+                             "undetected_bad_decodes", "recovery"),
+                            errors):
+                continue
+            if e["undetected_bad_decodes"] != 0:
+                errors.append(f"{name}: {key} accepted "
+                              f"{e['undetected_bad_decodes']} wrong "
+                              "decodes past verification")
+            rec = e["recovery"]
+            _require(name, rec, f"{key} recovery",
+                     ("rounds", "flagged", "accepted", "correct"),
+                     errors)
+            if smoke:
+                continue
+            if e["corrupted_rounds"] > 0 \
+                    and e["detection_rate"] < SECURITY_DETECTION_BAR:
+                errors.append(
+                    f"{name}: {key} detection rate "
+                    f"{e['detection_rate']:.2f} < the "
+                    f"{SECURITY_DETECTION_BAR} bar")
+            if not (rec.get("accepted") and rec.get("correct")):
+                errors.append(f"{name}: {key} recovery loop never "
+                              "reached an accepted correct decode")
+
+    rep = data.get("replay_detection")
+    if rep is None:
+        errors.append(f"{name}: missing 'replay_detection'")
+    elif _require(name, rep, "replay_detection",
+                  ("replays", "flagged"), errors):
+        if rep["flagged"] != rep["replays"]:
+            errors.append(
+                f"{name}: replay_detection flagged only "
+                f"{rep['flagged']}/{rep['replays']} replayed headers")
+    if K is None:
+        errors.append(f"{name}: config missing 'K'")
+    return errors
+
+
 GRID_SCHEMA = "fednc-grid-v1"
 GRID_AXES = ("strategy", "straggler", "delay_spread", "p_dropout",
-             "population", "kernel")
+             "population", "kernel", "adversary")
 GRID_SIM_STRATEGIES = ("fednc_stream", "fednc_stages", "fedavg")
 GRID_DRAW_FIELDS = ("fednc_draws_mean", "fedavg_draws_mean",
                     "draw_ratio")
@@ -424,7 +541,12 @@ def check_grid(name: str, data: dict) -> list[str]:
                     f"{name}: {key} is a seeded cell but its wire "
                     f"overhead ratio {entry['wire_overhead_ratio']:.4f}"
                     " did not shrink below 1")
-            if entry["decode_rate"] < 1.0 and not ax["p_dropout"] > 0:
+            # a byzantine cell legitimately rejects corrupted rounds,
+            # so decode_rate < 1 is only an error on a clean channel
+            byzantine = str(ax.get("adversary",
+                                   "none")).startswith("byzantine")
+            if entry["decode_rate"] < 1.0 and not ax["p_dropout"] > 0 \
+                    and not byzantine:
                 errors.append(
                     f"{name}: {key} dropped rounds "
                     f"(decode_rate={entry['decode_rate']:.2f}) on a "
@@ -467,12 +589,32 @@ def _check_grid_full(name: str, data: dict) -> list[str]:
     return errors
 
 
+#: the CI smoke grid must exercise the adversary axis: at least this
+#: many cells with an active (non-"none") adversary coordinate
+SMOKE_MIN_ADVERSARY_CELLS = 2
+
+
+def check_grid_smoke(name: str, data: dict) -> list[str]:
+    """The CI smoke grid: the base schema + adversary-axis coverage."""
+    errors = check_grid(name, data)
+    cells = [k for k, e in data.get("scenarios", {}).items()
+             if e.get("axes", {}).get("adversary", "none") != "none"]
+    if len(cells) < SMOKE_MIN_ADVERSARY_CELLS:
+        errors.append(
+            f"{name}: only {len(cells)} adversary cells (bar: >= "
+            f"{SMOKE_MIN_ADVERSARY_CELLS}; run `python -m repro.grid "
+            "--smoke` to regenerate)")
+    return errors
+
+
 CHECKS = {
     "BENCH_kernels.json": check_kernels,
     "BENCH_hierarchy.json": check_hierarchy,
     "BENCH_sim.json": check_sim,
     "BENCH_serve.json": check_serve,
+    "BENCH_security.json": check_security,
     "GRID_grid.json": check_grid,
+    "GRID_smoke.json": check_grid_smoke,
 }
 
 
@@ -486,6 +628,9 @@ def main() -> int:
     checks.update({fname: check_grid for fname in extra})
     checks.update({p.name: check_serve
                    for p in sorted(ROOT.glob("BENCH_serve_*.json"))
+                   if p.name not in CHECKS})
+    checks.update({p.name: check_security
+                   for p in sorted(ROOT.glob("BENCH_security_*.json"))
                    if p.name not in CHECKS})
     # Chrome traces (bench_serve --trace, repro.grid --trace) are
     # optional artifacts but must be valid trace-event JSON when present

@@ -16,6 +16,10 @@ Documentation rots in three ways this script makes impossible:
    README.md must be byte-identical to the one this script regenerates
    from BENCH_kernels.json (``python scripts/check_docs.py --table``
    prints it for pasting after a bench re-run).
+4. **Stale index** — docs/README.md is the reading-order map of the
+   docs/ pages; it must link every docs/*.md page in DOC_FILES and
+   nothing else, so adding a page without indexing it (or indexing a
+   deleted page) fails the fast tier.
 
 Exit code 0 = docs match the code.
 """
@@ -29,9 +33,10 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
-DOC_FILES = ("README.md", "docs/engine.md", "docs/simulator.md",
-             "docs/grid.md", "docs/serving.md", "docs/observability.md",
-             "docs/analysis.md", "benchmarks/README.md")
+DOC_FILES = ("README.md", "docs/README.md", "docs/engine.md",
+             "docs/simulator.md", "docs/grid.md", "docs/serving.md",
+             "docs/observability.md", "docs/analysis.md",
+             "docs/security.md", "benchmarks/README.md")
 FENCE_RE = re.compile(r"^```(\w*)[^\n]*\n(.*?)^```\s*$",
                       re.MULTILINE | re.DOTALL)
 KERNEL_MARK_RE = re.compile(
@@ -98,6 +103,22 @@ def check_kernel_names(path: pathlib.Path) -> list[str]:
     return []
 
 
+def check_docs_index(index: pathlib.Path) -> list[str]:
+    """docs/README.md links exactly the docs/*.md pages in DOC_FILES."""
+    if not index.exists():
+        return [f"{index} does not exist"]
+    want = {rel.split("/", 1)[1] for rel in DOC_FILES
+            if rel.startswith("docs/") and rel != "docs/README.md"}
+    linked = set(re.findall(r"\]\((?:\./)?([\w-]+\.md)\)",
+                            index.read_text()))
+    if linked != want:
+        missing = sorted(want - linked)
+        extra = sorted(linked - want)
+        return [f"{index}: index out of sync with DOC_FILES "
+                f"(missing links: {missing}, stale links: {extra})"]
+    return []
+
+
 def check_bench_table(readme: pathlib.Path,
                       bench_json: pathlib.Path) -> list[str]:
     """README throughput table lines match BENCH_kernels.json."""
@@ -121,6 +142,7 @@ def main() -> int:
     errors += check_kernel_names(ROOT / "README.md")
     errors += check_bench_table(ROOT / "README.md",
                                 ROOT / "BENCH_kernels.json")
+    errors += check_docs_index(ROOT / "docs" / "README.md")
     for rel in DOC_FILES:
         path = ROOT / rel
         if not path.exists():

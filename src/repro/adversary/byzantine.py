@@ -1,0 +1,162 @@
+"""Byzantine packet injection and the recovery loop it forces.
+
+:class:`ByzantineChannel` is an *active* interior node: each coded
+tuple crossing it is corrupted independently with probability `rate`.
+Corruption is XOR with uniform GF(2^s) noise expanded from 4-byte
+counters (`repro.core.seeds`), which makes every mode expressible as
+the tiny :class:`repro.core.channel.RowTamper` plan — so the byzantine
+round still runs through the engine's fused channel path:
+
+* ``mode="flip"``  — payload symbols flipped, coding row intact: the
+  classic corrupted-packet fault.
+* ``mode="forge"`` — the coding row is replaced (XOR-with-uniform is
+  replacement-by-uniform) while the payload still belongs to the
+  *old* row: a forged header that poisons the decode if selected.
+* ``mode="both"``  — an arbitrarily hostile relay.
+
+Replayed seeds — the seeded wire format's own attack, where an old
+4-byte header is re-sent with a different payload — are not a per-row
+XOR (the forged row duplicates another transmitted row), so they are
+modeled on the stream path instead: :func:`replayed_seed_batch` builds
+the attack batch, and the server-side `StreamDecoder` flags every
+replay as an inconsistent dependent arrival.
+
+Detection is the redundant-rank cross-check
+(:meth:`CodingEngine.decode_verified` / ``round(verify=True)``), and
+:func:`rounds_to_recovery` measures the operational cost: how many
+round retries until a verified-clean decode is accepted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeds as seedlib
+from repro.core.channel import ChannelReport, RowTamper
+from repro.core.gf import get_field, rank as gf_rank
+from repro.core.rlnc import EncodedBatch, SeededBatch
+
+MODES = ("flip", "forge", "both")
+
+
+class ByzantineChannel:
+    """Corrupt each transmitted tuple independently with prob `rate`.
+
+    Exposes the full channel protocol: ``plan_transform`` (a RowTamper
+    — the engine's fused path applies, and verifies, the corruption
+    without materializing the honest payload between stages) and
+    ``transmit_encoded`` (the stage-wise oracle, consuming the same
+    RNG stream and producing bit-identical corruption).
+    """
+
+    def __init__(self, rate: float, seed: int = 0, mode: str = "flip"):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"corruption rate {rate} outside [0, 1]")
+        self.rate = float(rate)
+        self.mode = mode
+        self.rng = np.random.default_rng(seed)
+        self.corrupted = 0      # tuples tampered with so far
+
+    def plan_transform(self, n: int, s: int) -> RowTamper:
+        """Decide this transmission's corruption pattern (one draw of
+        the same RNG stream `transmit_encoded` consumes)."""
+        hit = self.rng.random(n) < self.rate
+        idx = np.nonzero(hit)[0]
+        m = int(idx.size)
+        self.corrupted += m
+        # draw both seed vectors regardless of mode so the RNG stream
+        # (and therefore every later round) is mode-independent
+        row_seeds = self.rng.integers(0, 2**32, size=m, dtype=np.uint32)
+        payload_seeds = self.rng.integers(0, 2**32, size=m,
+                                          dtype=np.uint32)
+        return RowTamper(
+            idx=idx,
+            row_seeds=row_seeds if self.mode in ("forge", "both") else None,
+            payload_seeds=(payload_seeds if self.mode in ("flip", "both")
+                           else None),
+        )
+
+    def transmit_encoded(self, batch, s: int
+                         ) -> tuple[EncodedBatch, ChannelReport]:
+        """Stage-wise oracle for the fused RowTamper path."""
+        plan = self.plan_transform(batch.n, s)
+        out = apply_tamper(batch, plan, s)
+        dec = (out.n >= out.K
+               and int(gf_rank(get_field(s), out.A)) == out.K)
+        return out, ChannelReport(batch.n, out.n, dec)
+
+
+def apply_tamper(batch, plan: RowTamper, s: int) -> EncodedBatch:
+    """Materialize a RowTamper plan against an encoded batch.
+
+    A SeededBatch is expanded first: a corrupted row is no longer
+    derivable from any 4-byte seed, so the tampered batch is always
+    materialized (exactly what a downstream receiver would see)."""
+    if isinstance(batch, SeededBatch):
+        batch = batch.expand(s)
+    A = jnp.asarray(batch.A)
+    C = jnp.asarray(batch.C)
+    if plan.m:
+        idx = jnp.asarray(np.asarray(plan.idx), jnp.int32)
+        if plan.row_seeds is not None:
+            err = seedlib.expand_rows_jit(
+                jnp.asarray(plan.row_seeds, jnp.uint32), batch.K, s)
+            A = A.at[idx].set(A[idx] ^ err)
+        if plan.payload_seeds is not None and C.shape[1]:
+            err = seedlib.expand_rows_jit(
+                jnp.asarray(plan.payload_seeds, jnp.uint32),
+                int(C.shape[1]), s)
+            C = C.at[idx].set(C[idx] ^ err)
+    return EncodedBatch(A=A, C=C)
+
+
+def replayed_seed_batch(batch: SeededBatch, count: int, s: int = 8,
+                        seed: int = 0) -> SeededBatch:
+    """Append `count` replayed tuples to a seeded batch: each re-sends
+    the 4-byte header of a random earlier tuple with a fresh garbage
+    payload.  The replayed rows are exact duplicates in the row space,
+    so every one of them reaches the server's basis as a *dependent*
+    arrival with a mismatched payload — the precise signature
+    `StreamDecoder` counts in ``inconsistent``."""
+    rng = np.random.default_rng(seed)
+    pick = rng.integers(0, batch.n, size=int(count))
+    seeds2 = jnp.concatenate(
+        [batch.seeds, batch.seeds[jnp.asarray(pick, jnp.int32)]])
+    L = int(batch.C.shape[1])
+    junk = rng.integers(0, 2**s, size=(int(count), L)).astype(np.uint8)
+    C2 = jnp.concatenate([batch.C, jnp.asarray(junk)])
+    return SeededBatch(seeds=seeds2, C=C2, K=batch.K)
+
+
+def rounds_to_recovery(engine, P, key, channel, max_rounds: int = 64
+                       ) -> dict:
+    """Retry engine rounds against a hostile channel until a decode is
+    *accepted* (rank K reached and the redundant-rank cross-check did
+    not flag corruption).  The server-side policy this measures:
+    discard any flagged round and re-request fresh coded tuples.
+
+    Returns ``rounds`` (1-based count of the accepted round; equals
+    ``max_rounds`` + "accepted": False when the budget ran out),
+    ``flagged`` (decodes rejected by verification), ``rank_failures``
+    (corruption broke invertibility outright), ``accepted``, and
+    ``correct`` — whether the accepted decode actually equals P (the
+    oracle's view; False here is a missed detection)."""
+    flagged = rank_failures = 0
+    for r in range(int(max_rounds)):
+        out = engine.round(P, jax.random.fold_in(key, r), channel,
+                           verify=True)
+        if not out.ok:
+            rank_failures += 1
+            continue
+        if out.verified is False:
+            flagged += 1
+            continue
+        return {"rounds": r + 1, "flagged": flagged,
+                "rank_failures": rank_failures, "accepted": True,
+                "correct": bool((out.packets == P).all())}
+    return {"rounds": int(max_rounds), "flagged": flagged,
+            "rank_failures": rank_failures, "accepted": False,
+            "correct": False}

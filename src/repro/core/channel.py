@@ -123,6 +123,29 @@ class RowMix:
     R: jnp.ndarray
 
 
+@dataclass(frozen=True)
+class RowTamper:
+    """Channel plan: a byzantine interior node delivers all n tuples,
+    but XORs rows ``idx`` with adversarial noise — uniform GF(2^s)
+    symbols expanded from 4-byte counters (`repro.core.seeds`), so the
+    plan itself stays tiny: the engine regenerates the error rows at
+    the shapes it knows (K for coding rows, L for payloads) instead of
+    shipping an L-sized error matrix.
+
+    ``row_seeds``/``payload_seeds`` are (m,) uint32 or ``None``:
+    XOR-with-uniform is replacement-by-uniform, so seeding only the
+    payload models flipped symbols, only the row models a forged
+    coding vector, and both models an arbitrarily hostile relay.
+    Produced by :class:`repro.adversary.ByzantineChannel`."""
+    idx: np.ndarray
+    row_seeds: np.ndarray | None = None
+    payload_seeds: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return int(np.asarray(self.idx).shape[0])
+
+
 class ErasureChannel:
     """IID packet erasures with probability `p_erase`."""
 

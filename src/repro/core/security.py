@@ -6,12 +6,22 @@
 * `simulate_error_probability` — Monte-Carlo decode-failure rate of a
   FedNC round pushed through a MultiHopChannel; validates Table I's
   'Error Probability' column (0.5 / 0.0625 / 0.0039 / 0.3239).
-* `eavesdropper_leak_probability` — closed-form probability that an
-  attacker intercepting each of the K uploaded tuples independently
-  with probability p achieves full rank (= must capture all K tuples
-  if only K are ever sent, scaled by the rank statistics of RLNC).
+* `full_rank_probability(n, K, s)` — exact P[an n×K uniform GF(2^s)
+  matrix has rank K]; 0 whenever n < K (the rank-K wall every
+  adversary hits).
+* `eavesdropper_leak_probability(n, K, p, s)` — closed-form
+  probability that an attacker intercepting each of n transmitted
+  coded tuples independently with probability p achieves rank K: the
+  binomial mixture of `full_rank_probability` over the intercepted
+  count.  Monte-Carlo-validated by ``benchmarks/bench_security.py``
+  through :class:`repro.adversary.EavesdropperView`.
+* `eavesdropper_full_leak_probability(K, p, s)` — the n == K special
+  case: all K tuples must be captured AND the K×K matrix must be
+  nonsingular, i.e. p^K · Π(1 - q^-i).
 """
 from __future__ import annotations
+
+import math
 
 import numpy as np
 
@@ -29,6 +39,20 @@ def singular_probability_uniform(K: int, s: int) -> float:
     for i in range(1, K + 1):
         p_ns *= 1.0 - q ** (-i)
     return 1.0 - p_ns
+
+
+def full_rank_probability(n: int, K: int, s: int) -> float:
+    """Exact P[an n×K uniform GF(2^s) matrix has rank K] (n rows heard,
+    K sources): Π_{i=0}^{K-1} (1 - q^-(n-i)), and 0 for n < K — fewer
+    than K intercepted tuples can never reach rank K, whatever the
+    coefficients."""
+    if n < K:
+        return 0.0
+    q = float(2**s)
+    p = 1.0
+    for i in range(K):
+        p *= 1.0 - q ** (-(n - i))
+    return p
 
 
 def simulate_error_probability(K: int, s: int, eta: int, trials: int,
@@ -57,13 +81,35 @@ def simulate_error_probability(K: int, s: int, eta: int, trials: int,
     return failures / trials
 
 
+def eavesdropper_leak_probability(n: int, K: int, p_intercept: float,
+                                  s: int = 8) -> float:
+    """P[attacker reaches rank K] when each of n transmitted coded
+    tuples is intercepted independently with probability p.
+
+    Binomial mixture over the intercepted count e (every subset of a
+    uniform RLNC stack is itself uniform):
+
+        Σ_e C(n, e) · p^e (1-p)^(n-e) · full_rank_probability(e, K, s)
+
+    Terms with e < K vanish — the paper's security claim that an
+    eavesdropper holding fewer than K tuples learns *nothing* about
+    the K source packets."""
+    p = float(p_intercept)
+    total = 0.0
+    for e in range(K, n + 1):
+        total += (math.comb(n, e) * p**e * (1.0 - p) ** (n - e)
+                  * full_rank_probability(e, K, s))
+    return total
+
+
 def eavesdropper_full_leak_probability(K: int, p_intercept: float,
                                        s: int = 8) -> float:
-    """P[attacker reaches rank K] when each of the K transmitted coded
-    tuples is intercepted independently with prob p.
+    """P[attacker reaches rank K] when exactly K coded tuples are
+    transmitted, each intercepted independently with prob p.
 
     Needs all K tuples AND the K×K coding matrix nonsingular:
-        p^K · Π_{i=1..K}(1 - q^-i).
+        p^K · Π_{i=1..K}(1 - q^-i)
+    (== ``eavesdropper_leak_probability(K, K, p, s)``).
     Compare FedAvg: expected leaked client models = p·K > 0 for any p.
     """
     q = float(2**s)

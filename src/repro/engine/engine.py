@@ -43,11 +43,12 @@ from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.core import packets as pkt
 from repro.core import seeds as seedlib
-from repro.core.channel import ChannelReport, RowGather, RowMix
+from repro.core.channel import ChannelReport, RowGather, RowMix, RowTamper
 from repro.core.gf import get_field, invert
 from repro.core.rlnc import EncodedBatch, SeededBatch
 
@@ -87,6 +88,10 @@ class EngineRound:
     ok: bool
     packets: Optional[jnp.ndarray]   # (K, L) decoded symbols when ok
     report: Any = None               # ChannelReport when a channel ran
+    # redundant-rank cross-check (round(verify=True)): True = every
+    # redundant delivered tuple is consistent with the decode, False =
+    # corruption detected, None = not checked / no redundancy to check
+    verified: Optional[bool] = None
 
 
 #: shared default so signatures avoid calls in argument defaults
@@ -416,6 +421,64 @@ class CodingEngine:
             return False, None
         return True, self.matmul(A_inv, batch.C, stage="decode")
 
+    def decode_verified(self, batch) -> tuple[bool, Optional[jnp.ndarray],
+                                              Optional[bool]]:
+        """(ok, P_hat, verified): decode plus the byzantine cross-check.
+
+        Decoding consumes only K of the n delivered tuples; the n - K
+        *redundant* ones are free integrity checks: re-encode P_hat
+        with each redundant coding row and compare the payload digest
+        against what the channel delivered.  Any mismatch proves some
+        tuple was corrupted — an honest channel (lossy, reordering, or
+        recoding) delivers only exact GF combinations, so every
+        redundant row of an uncorrupted stream reproduces its payload
+        bit-for-bit.
+
+        ``verified`` is True when every redundant tuple checks out,
+        False on any mismatch, and None when there is no redundancy to
+        check (n == K after selection) — corruption can then slip
+        through undetected, which is why the byzantine benchmarks run
+        with ``extra_tuples > 0``.  Note False flags the *round*, not a
+        row: a forged row may itself decode cleanly and instead poison
+        the check of an honest redundant row; either way the server
+        knows to discard and re-request.
+
+        >>> import jax, jax.numpy as jnp
+        >>> eng = CodingEngine(EngineConfig(s=8, kernel="jnp"))
+        >>> P = jnp.arange(12, dtype=jnp.uint8).reshape(3, 4)
+        >>> batch = eng.encode(P, eng.coding_matrix(jax.random.PRNGKey(0), 5, 3))
+        >>> ok, P_hat, verified = eng.decode_verified(batch)
+        >>> bool(ok), (P_hat == P).all().item(), verified
+        (True, True, True)
+        >>> bad = EncodedBatch(A=batch.A, C=batch.C.at[4, 0].set(batch.C[4, 0] ^ 1))
+        >>> eng.decode_verified(bad)[2]
+        False
+        """
+        import hashlib
+
+        if isinstance(batch, SeededBatch):
+            batch = batch.expand(self.config.s)
+        K, n = batch.K, batch.n
+        if n < K:
+            return False, None, None
+        ok, idx, _ = incremental_select(batch.A, self.config.s)
+        ok_inv, A_inv = invert(self.field, batch.A[idx])
+        if not bool(ok & ok_inv):
+            return False, None, None
+        P_hat = self.matmul(A_inv, batch.C[idx], stage="decode")
+        red = np.setdiff1d(np.arange(n), np.asarray(idx))
+        if red.size == 0:
+            return True, P_hat, None
+        red_j = jnp.asarray(red, jnp.int32)
+        pred = self.matmul(batch.A[red_j], P_hat, stage="verify")
+        pred_np = np.asarray(pred)
+        got_np = np.asarray(batch.C[red_j])
+        verified = all(
+            hashlib.sha256(pred_np[i].tobytes()).digest()
+            == hashlib.sha256(got_np[i].tobytes()).digest()
+            for i in range(red.size))
+        return True, P_hat, bool(verified)
+
     # -- fused round internals --------------------------------------------
 
     def _fused_ideal_round(self, P: jnp.ndarray, A: jnp.ndarray,
@@ -453,10 +516,97 @@ class CodingEngine:
                              enc_seeded=seeds is not None)
         return EngineRound(True, P_hat, None)
 
+    def _expand_err(self, err_seeds, which, width: int) -> jnp.ndarray:
+        """Materialize adversarial error rows `which` of a RowTamper
+        seed vector at `width` symbols (K for coding rows, L for
+        payloads) — same Threefry expansion as the wire format."""
+        sel = jnp.asarray(np.asarray(err_seeds)[which], jnp.uint32)
+        return seedlib.expand_rows_jit(sel, width, self.config.s)
+
+    def _fused_tamper_round(self, P: jnp.ndarray, A: jnp.ndarray,
+                            plan: RowTamper,
+                            seeds: Optional[jnp.ndarray] = None,
+                            verify: bool = False) -> EngineRound:
+        """RowTamper tail: byzantine corruption folded into the stream.
+
+        All n tuples are delivered, rows `plan.idx` XOR-ed with
+        seed-expanded noise.  Selection and inversion run on the
+        *received* (corrupted) matrix — the server cannot tell a forged
+        row from an honest one — while the encode leg replays the true
+        rows, so the decode output is exactly what a stage-wise
+        receiver of the corrupted batch would compute:
+
+            P_hat = A_rx[sel]^-1 · C_rx[sel]
+                  = A_inv·(A_true[sel]·P)  ^  A_inv·E[sel]
+
+        with E the (sparse) payload-error matrix; only its few nonzero
+        rows are ever expanded to L symbols.  With `verify`, the
+        redundant delivered rows are cross-checked against P_hat
+        (:meth:`decode_verified` semantics, residual form) at the cost
+        of two extra (n-K)-row streamed products.
+        """
+        n, K = A.shape
+        L = P.shape[1]
+        tr = obs.get_tracer()
+        idx_np = np.asarray(plan.idx, np.int64)
+        with tr.span("engine.transform", cat="engine", n=n) as sp:
+            A_rx = A
+            if plan.m and plan.row_seeds is not None:
+                idx_t = jnp.asarray(idx_np, jnp.int32)
+                A_err = self._expand_err(plan.row_seeds,
+                                         np.arange(plan.m), K)
+                A_rx = A.at[idx_t].set(A[idx_t] ^ A_err)
+            sp.fence(A_rx)
+        with tr.span("engine.select", cat="engine", n=n) as sp:
+            ok, sel, _ = incremental_select(A_rx, self.config.s)
+            sp.fence(sel)
+        report = ChannelReport(n, n, bool(ok))
+        if not bool(ok):
+            return EngineRound(False, None, report)
+        with tr.span("engine.invert", cat="engine", K=K) as sp:
+            _, A_inv = invert(self.field, A_rx[sel])
+            sp.fence(A_inv)
+        sel_np = np.asarray(sel, np.int64)
+        enc_rows = seeds if seeds is not None else A
+        P_hat = self._stream(enc_rows[sel], P, A_post=A_inv,
+                             enc_seeded=seeds is not None)
+        pos_of = {int(r): j for j, r in enumerate(idx_np)}
+
+        def err_at(rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+            hit = [(j, pos_of[int(r)]) for j, r in enumerate(rows)
+                   if int(r) in pos_of]
+            return (np.asarray([h[0] for h in hit], np.int64),
+                    np.asarray([h[1] for h in hit], np.int64))
+
+        if plan.payload_seeds is not None and L:
+            where, which = err_at(sel_np)
+            if where.size:
+                E = self._expand_err(plan.payload_seeds, which, L)
+                P_hat = P_hat ^ self.field.matmul(
+                    A_inv[:, jnp.asarray(where, jnp.int32)], E)
+        verified = None
+        if verify:
+            red = np.setdiff1d(np.arange(n), sel_np)
+            if red.size:
+                red_j = jnp.asarray(red, jnp.int32)
+                C_red = self._stream(enc_rows[red_j], P,
+                                     enc_seeded=seeds is not None,
+                                     stage="verify")
+                if plan.payload_seeds is not None and L:
+                    where, which = err_at(red)
+                    if where.size:
+                        E = self._expand_err(plan.payload_seeds, which, L)
+                        w = jnp.asarray(where, jnp.int32)
+                        C_red = C_red.at[w].set(C_red[w] ^ E)
+                resid = self._stream(A_rx[red_j], P_hat,
+                                     stage="verify") ^ C_red
+                verified = not bool(jnp.any(resid != 0))
+        return EngineRound(True, P_hat, report, verified)
+
     def _fused_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
                              channel,
-                             seeds: Optional[jnp.ndarray] = None
-                             ) -> EngineRound:
+                             seeds: Optional[jnp.ndarray] = None,
+                             verify: bool = False) -> EngineRound:
         """encode -> channel -> select -> decode as ONE streamed dispatch.
 
         The channel's `plan_transform` yields its whole action on the
@@ -472,8 +622,12 @@ class CodingEngine:
         n, K = A.shape
         s = self.config.s
         tr = obs.get_tracer()
+        plan = channel.plan_transform(n, s)
+        if isinstance(plan, RowTamper):
+            # byzantine corruption: the whole round (including the
+            # redundant-rank cross-check) has its own fused tail
+            return self._fused_tamper_round(P, A, plan, seeds, verify)
         with tr.span("engine.transform", cat="engine", n=n) as sp:
-            plan = channel.plan_transform(n, s)
             if isinstance(plan, RowGather):
                 delivered = int(len(plan.idx))
                 if delivered < K:
@@ -513,33 +667,42 @@ class CodingEngine:
         return EngineRound(True, P_hat, report)
 
     def _stagewise_channel_round(self, P: jnp.ndarray, A: jnp.ndarray,
-                                 channel) -> EngineRound:
+                                 channel,
+                                 verify: bool = False) -> EngineRound:
         """Fallback for channels without `plan_transform`: materialize
         the coded payload and run the stages in order."""
         batch = self.encode(P, A)
         batch, report = channel.transmit_encoded(batch, self.config.s)
         if not report.decodable:
             return EngineRound(False, None, report)
+        if verify:
+            ok, P_hat, verified = self.decode_verified(batch)
+            return EngineRound(bool(ok), P_hat, report, verified)
         ok, P_hat = self.decode(batch)
         return EngineRound(bool(ok), P_hat, report)
 
     def _run_round(self, P: jnp.ndarray, A: jnp.ndarray, channel,
-                   seeds: Optional[jnp.ndarray] = None) -> EngineRound:
+                   seeds: Optional[jnp.ndarray] = None,
+                   verify: bool = False) -> EngineRound:
         """Shared channel-dispatch tail of `round`/`multi_edge_round`.
 
         `seeds`, when given, is the seed vector whose expansion is `A`;
         the fused paths then run their encode leg through the seeded
         kernel.  The stage-wise fallback materializes (it already has
-        A), which is bit-identical by construction."""
+        A), which is bit-identical by construction.  `verify` requests
+        the redundant-rank cross-check (honored by the stage-wise and
+        RowTamper paths; honest fused plans leave ``verified=None``)."""
         if channel is None:
             return self._fused_ideal_round(P, A, seeds)
         if hasattr(channel, "plan_transform"):
-            return self._fused_channel_round(P, A, channel, seeds)
-        return self._stagewise_channel_round(P, A, channel)
+            return self._fused_channel_round(P, A, channel, seeds,
+                                             verify)
+        return self._stagewise_channel_round(P, A, channel, verify)
 
     # -- the full round ---------------------------------------------------
 
-    def round(self, P: jnp.ndarray, key, channel=None) -> EngineRound:
+    def round(self, P: jnp.ndarray, key, channel=None, *,
+              verify: bool = False) -> EngineRound:
         """encode -> (channel) -> select -> decode for one packet matrix.
 
         Ideal channel (None): the coding matrix is drawn, selected, and
@@ -567,10 +730,11 @@ class CodingEngine:
                 # encode stays seed-addressed inside the kernel.
                 seeds = self.coding_seeds(key, n)
                 out = self._run_round(P, self.expand_seeds(seeds, K),
-                                      channel, seeds=seeds)
+                                      channel, seeds=seeds,
+                                      verify=verify)
             else:
                 A = self.coding_matrix(key, n, K)
-                out = self._run_round(P, A, channel)
+                out = self._run_round(P, A, channel, verify=verify)
             sp.fence(out.packets)
         return out
 
@@ -601,7 +765,8 @@ class CodingEngine:
     def multi_edge_round(self, P: jnp.ndarray, key,
                          edges: Sequence[Sequence[int]], *,
                          spare_per_edge: int = 0,
-                         wan_channel=None) -> EngineRound:
+                         wan_channel=None,
+                         verify: bool = False) -> EngineRound:
         """One fused hierarchical round: E edge encodes + WAN + decode.
 
         Instead of E separate `encode` re-entries (one per edge server)
@@ -633,7 +798,7 @@ class CodingEngine:
                                    cat="engine", K=K, L=L,
                                    edges=len(edges)) as sp:
             A = self.multi_edge_coding_matrix(key, edges, K, n_out)
-            out = self._run_round(P, A, wan_channel)
+            out = self._run_round(P, A, wan_channel, verify=verify)
             sp.fence(out.packets)
         return out
 

@@ -39,13 +39,23 @@ def reduce_insert(field, B, Y, filled, a, c):
     normalize by the residual's first nonzero symbol and insert at
     that pivot, clearing its column from the existing rows to stay
     RREF.  Identical row operations hit Y, preserving the invariant
-    B[p]·P = Y[p].  Returns ``(B, Y, filled, was_independent)``.
+    B[p]·P = Y[p].  Returns ``(B, Y, filled, was_independent,
+    inconsistent)``.
+
+    ``inconsistent`` is the byzantine tripwire: an honest dependent
+    arrival (a, c) = (Σ λ_p B[p], Σ λ_p Y[p]) reduces to zero in BOTH
+    the coefficient and the payload column, so a zero coefficient
+    residual with a NONZERO payload residual proves some tuple on this
+    stream was corrupted (flipped symbols, a forged coding row, or a
+    replayed seed with a different payload) — no honest channel, lossy
+    or recoding, can produce it.
     """
     coeffs = jnp.where(filled, a, jnp.uint8(0))
     red_a = a ^ field.matmul(coeffs[None, :], B)[0]
     red_c = c ^ field.matmul(coeffs[None, :], Y)[0]
     nz = red_a != 0
     found = jnp.any(nz)
+    bad = (~found) & jnp.any(red_c != 0)
     piv = jnp.argmax(nz)                    # first nonzero column
 
     def insert(args):
@@ -60,7 +70,7 @@ def reduce_insert(field, B, Y, filled, a, c):
 
     B, Y, filled = jax.lax.cond(found, insert, lambda args: args,
                                 (B, Y, filled))
-    return B, Y, filled, found
+    return B, Y, filled, found, bad
 
 
 @functools.lru_cache(maxsize=None)
@@ -75,8 +85,8 @@ def _select_fn(s: int):
 
         def body(i, state):
             B, Y, filled, sel, count = state
-            B, Y, filled, found = reduce_insert(field, B, Y, filled,
-                                                A[i], c0)
+            B, Y, filled, found, _ = reduce_insert(field, B, Y, filled,
+                                                   A[i], c0)
             sel = jnp.where(found, sel.at[count].set(i), sel)
             return B, Y, filled, sel, count + found.astype(jnp.int32)
 

@@ -29,6 +29,14 @@ state machine:
 States: ``FILLING`` (rank < K) -> ``COMPLETE`` (rank == K; further
 pushes are no-ops).  ``decoded_at`` records the 1-based arrival count
 at which rank K was reached — the measured Prop.-1 draw count.
+
+The reduced basis doubles as a byzantine tripwire: a *dependent*
+arrival whose payload residual is nonzero violates the invariant
+B[p]·P = Y[p] and proves corruption somewhere on the stream (see
+``reduce_insert``).  Block ingests flag such arrivals for free
+(``inconsistent`` / ``first_inconsistent_at``); per-arrival ``push``
+keeps checking after COMPLETE only when constructed with
+``detect=True`` (the extra dispatches are pure verification).
 """
 from __future__ import annotations
 
@@ -52,8 +60,9 @@ def _push_fn(s: int):
 
     @jax.jit
     def push(B, Y, filled, a, c):
-        B, Y, filled, found = reduce_insert(field, B, Y, filled, a, c)
-        return B, Y, filled, found
+        B, Y, filled, found, bad = reduce_insert(field, B, Y, filled,
+                                                 a, c)
+        return B, Y, filled, found, bad
 
     return push
 
@@ -67,12 +76,14 @@ def _ingest_fn(s: int):
         def body(carry, ac):
             B, Y, filled = carry
             a, c = ac
-            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
-            return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
+            B, Y, filled, _, bad = reduce_insert(field, B, Y, filled,
+                                                 a, c)
+            return (B, Y, filled), (jnp.sum(filled).astype(jnp.int32),
+                                    bad)
 
-        (B, Y, filled), ranks = jax.lax.scan(
+        (B, Y, filled), (ranks, bads) = jax.lax.scan(
             body, (B, Y, filled), (A_rows, C_rows))
-        return B, Y, filled, ranks
+        return B, Y, filled, ranks, bads
 
     return ingest
 
@@ -95,12 +106,14 @@ def _ingest_seeded_fn(s: int, K: int):
             seed, c = sc
             a = expand_rows(seed[None], K, s)[0]
             a = jnp.where(col_mask, a, jnp.uint8(0))
-            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
-            return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
+            B, Y, filled, _, bad = reduce_insert(field, B, Y, filled,
+                                                 a, c)
+            return (B, Y, filled), (jnp.sum(filled).astype(jnp.int32),
+                                    bad)
 
-        (B, Y, filled), ranks = jax.lax.scan(
+        (B, Y, filled), (ranks, bads) = jax.lax.scan(
             body, (B, Y, filled), (seeds, C_rows))
-        return B, Y, filled, ranks
+        return B, Y, filled, ranks, bads
 
     return ingest
 
@@ -127,14 +140,18 @@ class StreamDecoder:
     (True, 3)
     """
 
-    def __init__(self, K: int, L: int = 0, s: int = 8):
+    def __init__(self, K: int, L: int = 0, s: int = 8,
+                 detect: bool = False):
         self.K, self.L, self.s = int(K), int(L), int(s)
+        self.detect = bool(detect)
         self.field = get_field(s)
         self._B = jnp.zeros((self.K, self.K), jnp.uint8)
         self._Y = jnp.zeros((self.K, self.L), jnp.uint8)
         self._filled = jnp.zeros((self.K,), jnp.bool_)
         self.arrivals = 0          # tuples consumed
         self.decoded_at: Optional[int] = None   # arrival count at rank K
+        self.inconsistent = 0      # provably-corrupted arrivals seen
+        self.first_inconsistent_at: Optional[int] = None
 
     # -- state ------------------------------------------------------------
 
@@ -150,6 +167,12 @@ class StreamDecoder:
     def state(self) -> str:
         return "COMPLETE" if self.complete else "FILLING"
 
+    @property
+    def tampered(self) -> bool:
+        """True once any arrival proved inconsistent with the basis —
+        the stream carried at least one corrupted tuple."""
+        return self.inconsistent > 0
+
     # -- consumption ------------------------------------------------------
 
     def _payload(self, c) -> jnp.ndarray:
@@ -164,27 +187,39 @@ class StreamDecoder:
         seed-addressed wire format — in which case the row is
         regenerated here (`repro.core.seeds`).  Returns the rank after
         the arrival.  Pushes after COMPLETE are counted but ignored
-        (the server has already decoded)."""
+        (the server has already decoded) unless ``detect=True``, in
+        which case they are still reduced so payload-inconsistent
+        redundancy keeps tripping the byzantine counter."""
         self.arrivals += 1
-        if self.complete:
+        if self.complete and not self.detect:
             return self.K
         a = jnp.asarray(a)
         if a.dtype == jnp.uint32 and a.ndim == 0:
             a = expand_rows(a[None], self.K, self.s)[0]
-        self._B, self._Y, self._filled, _ = _push_fn(self.s)(
+        self._B, self._Y, self._filled, _, bad = _push_fn(self.s)(
             self._B, self._Y, self._filled,
             jnp.asarray(a, jnp.uint8), self._payload(c))
+        if bool(bad):
+            self.inconsistent += 1
+            if self.first_inconsistent_at is None:
+                self.first_inconsistent_at = self.arrivals
         r = self.rank
-        if r == self.K:
+        if r == self.K and self.decoded_at is None:
             self.decoded_at = self.arrivals
         return r
 
     def _record_block(self, g: int, prior: int, already: bool,
-                      ranks) -> np.ndarray:
+                      ranks, bads) -> np.ndarray:
         self.arrivals += g
         ranks = np.asarray(ranks)
+        bads = np.asarray(bads)
         if not already and ranks.size and ranks[-1] == self.K:
             self.decoded_at = prior + int(np.argmax(ranks == self.K)) + 1
+        if bads.any():
+            self.inconsistent += int(bads.sum())
+            if self.first_inconsistent_at is None:
+                self.first_inconsistent_at = prior + int(
+                    np.argmax(bads)) + 1
         return ranks
 
     def ingest(self, A_rows, C_rows=None) -> np.ndarray:
@@ -203,10 +238,10 @@ class StreamDecoder:
             C_rows = jnp.zeros((g, self.L), jnp.uint8)
         prior = self.arrivals
         already = self.complete
-        self._B, self._Y, self._filled, ranks = _ingest_fn(self.s)(
+        self._B, self._Y, self._filled, ranks, bads = _ingest_fn(self.s)(
             self._B, self._Y, self._filled, A_rows,
             jnp.asarray(C_rows, jnp.uint8))
-        return self._record_block(g, prior, already, ranks)
+        return self._record_block(g, prior, already, ranks, bads)
 
     def ingest_seeded(self, seeds, C_rows=None,
                       col_mask=None) -> np.ndarray:
@@ -225,11 +260,11 @@ class StreamDecoder:
                 else jnp.asarray(col_mask, jnp.bool_))
         prior = self.arrivals
         already = self.complete
-        self._B, self._Y, self._filled, ranks = _ingest_seeded_fn(
+        self._B, self._Y, self._filled, ranks, bads = _ingest_seeded_fn(
             self.s, self.K)(
             self._B, self._Y, self._filled, seeds,
             jnp.asarray(C_rows, jnp.uint8), mask)
-        return self._record_block(g, prior, already, ranks)
+        return self._record_block(g, prior, already, ranks, bads)
 
     # -- the result -------------------------------------------------------
 
@@ -272,7 +307,8 @@ def _bank_fns(s: int, K: int):
             gen = expand_rows(seed[None], K, s)[0]
             a = jnp.where(use, gen, row)
             a = jnp.where(col_mask & ok, a, jnp.uint8(0))
-            B, Y, filled, _ = reduce_insert(field, B, Y, filled, a, c)
+            B, Y, filled, _, _ = reduce_insert(field, B, Y, filled,
+                                               a, c)
             return (B, Y, filled), jnp.sum(filled).astype(jnp.int32)
 
         (B, Y, filled), ranks = jax.lax.scan(

@@ -28,12 +28,17 @@ def smoke_axes() -> GridAxes:
     """The CI smoke grid: small enough to finish well under a minute
     on two CPU cores yet covering the StreamDecoder, the blind-box
     collector, and — via the ``engine`` cells — both the materialized
-    and the seeded GF-kernel families end-to-end."""
+    and the seeded GF-kernel families end-to-end.  The adversary axis
+    rides the engine cells (it collapses to ``none`` everywhere else),
+    adding an eavesdropper cell validated against the closed-form leak
+    probability and a byzantine cell exercising detection + recovery
+    per kernel family."""
     return GridAxes(
         strategy=("fednc_stream", "fedavg", "engine"),
         straggler=("exponential", "pareto"),
         population=(2_000,),
         kernel=("jnp_packed", "jnp_packed_seeded"),
+        adversary=("none", "eavesdrop:0.6", "byzantine:0.05"),
         clients_per_round=32,
         rounds=10,
         base_seed=7,
@@ -56,6 +61,9 @@ def main(argv=None) -> int:
     ap.add_argument("--populations", nargs="+", type=int,
                     default=[10_000])
     ap.add_argument("--kernels", nargs="+", default=["auto"])
+    ap.add_argument("--adversaries", nargs="+", default=["none"],
+                    help="adversary axis values: none, eavesdrop:p, "
+                         "collude:c, byzantine:b")
     ap.add_argument("--clients-per-round", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
@@ -83,6 +91,7 @@ def main(argv=None) -> int:
             p_dropout=tuple(args.dropouts),
             population=tuple(args.populations),
             kernel=tuple(args.kernels),
+            adversary=tuple(args.adversaries),
             clients_per_round=args.clients_per_round,
             rounds=args.rounds, base_seed=args.seed)
         out = args.out or "cli"

@@ -48,6 +48,14 @@ ASYNC_N_CLIENTS = 8
 ASYNC_IMAGE_SIZE = 16
 HIER_L = 2048           # payload symbols per client in hier scenarios
 HIER_SPARES = 2
+# per-tuple interception probability of a collude:c cell (the axis
+# parameter is the colluder count; the tap rate stays fixed so cells
+# differ in exactly one variable)
+COLLUDE_INTERCEPT_P = 0.5
+# recovery episodes measured per byzantine cell: each is a full
+# retry-until-verified loop, so the cost is bounded here rather than
+# growing with the corruption rate
+MAX_RECOVERY_EPISODES = 3
 
 # envelope spans contain the per-stage spans, so they are excluded
 # from a cell's per_stage breakdown (they would double-count it)
@@ -105,6 +113,7 @@ def _hier_metrics(spec: ScenarioSpec) -> dict:
     import jax
     import jax.numpy as jnp
 
+    from repro.adversary import AdversarySpec, EavesdropperView, tap_edges
     from repro.core.channel import ErasureChannel
     from repro.engine import CodingEngine, EngineConfig
 
@@ -123,26 +132,61 @@ def _hier_metrics(spec: ScenarioSpec) -> dict:
                            dtype=jnp.uint8)
     wan = (ErasureChannel(p_erase=spec.p_dropout, seed=spec.seed)
            if spec.p_dropout > 0 else None)
+    adv = AdversarySpec.parse(spec.adversary)
+    n_out = [len(ids) + HIER_SPARES for ids in edges]
+    adv_rng = np.random.default_rng(spec.seed ^ 0x5EC)
+    ev_reports: list[dict] = []
     ok_rounds = 0
     with obs.timed("grid.hier_rounds", cat="grid",
                    rounds=spec.rounds) as sw:
         out = None
         for r in range(spec.rounds):
+            rk = jax.random.fold_in(key, r)
             out = engine.multi_edge_round(
-                P, jax.random.fold_in(key, r), edges,
-                spare_per_edge=HIER_SPARES, wan_channel=wan)
+                P, rk, edges, spare_per_edge=HIER_SPARES,
+                wan_channel=wan)
             if out.ok:
                 assert (out.packets == P).all()
                 ok_rounds += 1
+            if adv.kind == "eavesdrop":
+                # the attacker taps ceil(p·E) edge->server links; the
+                # stacked matrix is reconstructed from the round key
+                # (same draw the fused round consumed)
+                n_tap = max(1, math.ceil(adv.param * E))
+                tapped = adv_rng.choice(E, size=min(n_tap, E),
+                                        replace=False)
+                A = engine.multi_edge_coding_matrix(rk, edges, K, n_out)
+                view = EavesdropperView(K=K, s=spec.s)
+                view.observe(tap_edges(A, edges, tapped,
+                                       spare_per_edge=HIER_SPARES))
+                rep = view.report()
+                rep["tapped_edges"] = int(len(tapped))
+                ev_reports.append(rep)
         if out is not None:      # fence before the clock stops
             sw.fence(out.packets)
-    return {
+    m = {
         "num_edges": E,
         "kernel_resolved": engine.kernel_name,
         "payload_symbols": K * HIER_L,
         "decode_rate": ok_rounds / max(spec.rounds, 1),
         "wall_s_per_round": sw.dur_s / max(spec.rounds, 1),
     }
+    if ev_reports:
+        partial = [rp for rp in ev_reports
+                   if rp["tapped_edges"] < E]
+        m.update({
+            "tapped_edges_mean": float(np.mean(
+                [rp["tapped_edges"] for rp in ev_reports])),
+            "eavesdrop_rank_mean": float(np.mean(
+                [rp["rank"] for rp in ev_reports])),
+            "full_leak_rate": float(np.mean(
+                [rp["full_leak"] for rp in ev_reports])),
+            # the e < K claim, structurally: any untapped edge leaves
+            # its member columns entirely outside the captured span
+            "rank_wall_holds": bool(all(rp["rank"] < K
+                                        for rp in partial)),
+        })
+    return m
 
 
 def _engine_metrics(spec: ScenarioSpec) -> dict:
@@ -157,13 +201,18 @@ def _engine_metrics(spec: ScenarioSpec) -> dict:
     import jax
     import jax.numpy as jnp
 
+    from repro.adversary import AdversarySpec
     from repro.core.channel import ErasureChannel
     from repro.core.packets import packet_wire_bytes
     from repro.engine import CodingEngine, EngineConfig
 
     K = spec.clients_per_round
     kernel = spec.kernel if spec.kernel != "-" else "auto"
-    extra = HIER_SPARES if spec.p_dropout > 0 else 0
+    adv = AdversarySpec.parse(spec.adversary)
+    # dropout needs erasure headroom; byzantine detection needs
+    # redundant rank for the cross-check (decode_verified docstring)
+    extra = (HIER_SPARES if spec.p_dropout > 0
+             or adv.kind == "byzantine" else 0)
     engine = CodingEngine(EngineConfig(s=spec.s, kernel=kernel,
                                        chunk_l=HIER_L,
                                        extra_tuples=extra))
@@ -173,19 +222,31 @@ def _engine_metrics(spec: ScenarioSpec) -> dict:
                            dtype=jnp.uint8)
     channel = (ErasureChannel(p_erase=spec.p_dropout, seed=spec.seed)
                if spec.p_dropout > 0 else None)
+    n_tuples = K + extra
+    adv_metrics: dict = {}
     ok_rounds = 0
     with obs.timed("grid.engine_rounds", cat="grid",
                    rounds=spec.rounds) as sw:
-        out = None
-        for r in range(spec.rounds):
-            out = engine.round(P, jax.random.fold_in(key, r),
-                               channel=channel)
-            if out.ok:
-                assert (out.packets == P).all()
-                ok_rounds += 1
+        if adv.kind == "byzantine":
+            out, ok_rounds, adv_metrics = _byzantine_rounds(
+                engine, P, key, spec, adv)
+        else:
+            out = None
+            views = []
+            for r in range(spec.rounds):
+                rk = jax.random.fold_in(key, r)
+                out = engine.round(P, rk, channel=channel)
+                if out.ok:
+                    assert (out.packets == P).all()
+                    ok_rounds += 1
+                if adv.kind in ("eavesdrop", "collude"):
+                    views.append(_observe_round(engine, rk, n_tuples,
+                                                K, spec, adv))
+            if views:
+                adv_metrics = _eavesdrop_summary(views, n_tuples, K,
+                                                 spec, adv)
         if out is not None:      # fence before the clock stops
             sw.fence(out.packets)
-    n_tuples = K + extra
     wire = packet_wire_bytes(K, HIER_L, spec.s, seeded=engine.seeded)
     wire_mat = packet_wire_bytes(K, HIER_L, spec.s, seeded=False)
     return {
@@ -197,7 +258,110 @@ def _engine_metrics(spec: ScenarioSpec) -> dict:
         "wire_bytes_per_packet": wire,
         "wire_bytes_per_round": wire * n_tuples,
         "wire_overhead_ratio": wire / wire_mat,
+        **adv_metrics,
     }
+
+
+def _observe_round(engine, round_key, n_tuples: int, K: int,
+                   spec: ScenarioSpec, adv) -> dict:
+    """One round through a fresh eavesdropper: reconstruct the rows
+    (or 4-byte seed headers — the expansion is public, so they hide
+    nothing) the engine transmitted under `round_key`, give the view
+    its per-tuple interception coin flips, and return its report."""
+    from repro.adversary import EavesdropperView
+
+    p = adv.param if adv.kind == "eavesdrop" else COLLUDE_INTERCEPT_P
+    colluders = range(adv.count) if adv.kind == "collude" else ()
+    if engine.seeded:
+        rows = np.asarray(engine.coding_seeds(round_key, n_tuples))
+    else:
+        rows = np.asarray(engine.coding_matrix(round_key, n_tuples, K))
+    view = EavesdropperView(K=K, s=spec.s, p_intercept=p,
+                            seed=int(round_key[0] ^ round_key[1]),
+                            colluders=colluders)
+    view.intercept(rows)
+    return view.report()
+
+
+def _eavesdrop_summary(views: list, n_tuples: int, K: int,
+                       spec: ScenarioSpec, adv) -> dict:
+    """Aggregate per-round eavesdropper reports + the closed form they
+    are validated against (collusion reduces the attacker's problem to
+    rank K - c over the quotient space, so the same formula applies
+    with K - c unknowns)."""
+    from repro.core.security import eavesdropper_leak_probability
+
+    p = adv.param if adv.kind == "eavesdrop" else COLLUDE_INTERCEPT_P
+    c = adv.count if adv.kind == "collude" else 0
+    m = {
+        "intercepted_mean": float(np.mean(
+            [v["intercepted"] for v in views])),
+        "eavesdrop_rank_mean": float(np.mean(
+            [v["rank"] for v in views])),
+        "full_leak_rate": float(np.mean(
+            [v["full_leak"] for v in views])),
+        "residual_entropy_bits_mean": float(np.mean(
+            [v["residual_entropy_bits"] for v in views])),
+        "leak_probability_closed_form": eavesdropper_leak_probability(
+            n_tuples, K - c, p, spec.s),
+    }
+    if c:
+        m["colluders"] = c
+        m["sources_recovered_mean"] = float(np.mean(
+            [v["sources_recovered"] for v in views]))
+    return m
+
+
+def _byzantine_rounds(engine, P, key, spec: ScenarioSpec, adv):
+    """The byzantine engine loop: every round runs with the redundant-
+    rank cross-check on, a round is *accepted* only when it decodes and
+    is not flagged, and each rejected round is retried with fresh coded
+    tuples — ``rounds_to_recovery`` episodes laid end to end.  Returns
+    ``(last_out, accepted_and_correct, metrics)``; decode_rate for a
+    byzantine cell therefore reads "verified-clean AND actually
+    correct rounds / rounds"."""
+    import jax
+
+    from repro.adversary import ByzantineChannel, rounds_to_recovery
+
+    channel = ByzantineChannel(adv.param, seed=spec.seed ^ 0xB12,
+                               mode="both")
+    recov, flagged, rank_failures = [], 0, 0
+    detected = undetected_bad = corrupted_rounds = ok_correct = 0
+    out = None
+    for r in range(spec.rounds):
+        before = channel.corrupted
+        rk = jax.random.fold_in(key, r)
+        out = engine.round(P, rk, channel=channel, verify=True)
+        hit = channel.corrupted > before
+        corrupted_rounds += hit
+        accepted = out.ok and out.verified is not False
+        flagged += int(out.ok and out.verified is False)
+        rank_failures += int(not out.ok)
+        if accepted:
+            correct = bool((out.packets == P).all())
+            ok_correct += int(correct)
+            undetected_bad += int(hit and not correct)
+        elif hit:
+            detected += 1
+        if not accepted and len(recov) < MAX_RECOVERY_EPISODES:
+            # the server's recovery policy: re-request until verified
+            # (measured for the first few rejections only — each
+            # episode is a full retry loop, too costly per rejection)
+            recov.append(rounds_to_recovery(
+                engine, P, jax.random.fold_in(rk, 0x7EC0), channel))
+    m = {
+        "corrupted_round_rate": corrupted_rounds / max(spec.rounds, 1),
+        "detection_rate": (detected / corrupted_rounds
+                           if corrupted_rounds else 1.0),
+        "flagged_rounds": flagged,
+        "rank_failures": rank_failures,
+        "undetected_bad_decodes": undetected_bad,
+        "rounds_to_recovery_mean": (float(np.mean(
+            [e["rounds"] for e in recov])) if recov else 1.0),
+        "recovery_episodes": len(recov),
+    }
+    return out, ok_correct, m
 
 
 def _async_metrics(spec: ScenarioSpec) -> dict:

@@ -13,7 +13,7 @@ GRID_SCHEMA = "fednc-grid-v1"
 
 #: the coordinate keys every scenario entry records
 AXIS_NAMES = ("strategy", "straggler", "delay_spread", "p_dropout",
-              "population", "kernel")
+              "population", "kernel", "adversary")
 #: Prop.-1 measurement fields every simulator scenario must carry
 #: (null allowed only under dropout, where FedAvg never completes)
 DRAW_RATIO_FIELDS = ("fednc_draws_mean", "fedavg_draws_mean",
@@ -62,9 +62,10 @@ def markdown_report(doc: dict) -> str:
         "## Scenarios",
         "",
         "| scenario | strategy | straggler | delay | dropout | pop "
-        "| kernel | draw ratio | FedAvg/K·H(K) | time speedup "
-        "| decode rate | wall s |",
-        "|---|---|---|---:|---:|---:|---|---:|---:|---:|---:|---:|",
+        "| kernel | adversary | draw ratio | FedAvg/K·H(K) "
+        "| time speedup | decode rate | leak rate | wall s |",
+        "|---|---|---|---:|---:|---:|---|---|---:|---:|---:|---:"
+        "|---:|---:|",
     ]
     for name, e in doc.get("scenarios", {}).items():
         ax = e.get("axes", {})
@@ -75,10 +76,12 @@ def markdown_report(doc: dict) -> str:
                 ax.get("straggler", "?"),
                 _fmt(ax.get("delay_spread")), _fmt(ax.get("p_dropout")),
                 _fmt(ax.get("population")), ax.get("kernel", "?"),
+                ax.get("adversary", "none"),
                 _fmt(e.get("draw_ratio")),
                 _fmt(e.get("fedavg_inflation")),
                 _fmt(e.get("time_speedup")),
-                _fmt(decode), _fmt(e.get("wall_s")),
+                _fmt(decode), _fmt(e.get("full_leak_rate")),
+                _fmt(e.get("wall_s")),
             ]) + " |")
     sweep = doc.get("delay_sweep")
     if sweep:

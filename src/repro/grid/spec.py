@@ -1,6 +1,6 @@
 """Scenario axes and their expansion into frozen ScenarioSpec records.
 
-The grid is a cartesian product over six axes; a scenario is one cell.
+The grid is a cartesian product over seven axes; a scenario is one cell.
 Two properties the rest of the machinery leans on:
 
 * **Normalization before product** — axes that cannot affect a
@@ -48,6 +48,7 @@ class ScenarioSpec:
     rounds: int
     s: int = 8
     seed: int = 0
+    adversary: str = "none"    # repro.adversary axis (kind:param)
 
     @property
     def num_edges(self) -> int:
@@ -69,6 +70,7 @@ class ScenarioSpec:
             "p_dropout": self.p_dropout,
             "population": self.population,
             "kernel": self.kernel,
+            "adversary": self.adversary,
         }
 
 
@@ -91,6 +93,7 @@ class GridAxes:
     p_dropout: tuple = (0.0,)
     population: tuple = (10_000,)
     kernel: tuple = ("auto",)
+    adversary: tuple = ("none",)
     # shared (non-axis) knobs
     clients_per_round: int = 32
     rounds: int = 20
@@ -103,7 +106,8 @@ class GridAxes:
         seen: set[str] = set()
         for combo in itertools.product(
                 self.strategy, self.straggler, self.delay_spread,
-                self.p_dropout, self.population, self.kernel):
+                self.p_dropout, self.population, self.kernel,
+                self.adversary):
             spec = self._make(*combo)
             if spec.name in seen:
                 continue
@@ -112,18 +116,26 @@ class GridAxes:
         return specs
 
     def _make(self, strategy: str, straggler: str, delay: float,
-              dropout: float, population: int, kernel: str
-              ) -> ScenarioSpec:
+              dropout: float, population: int, kernel: str,
+              adversary: str = "none") -> ScenarioSpec:
+        from repro.adversary import AdversarySpec
+        adv = AdversarySpec.parse(adversary)    # validate early
         if strategy in SIM_STRATEGIES:
             kernel = "-"          # simulator never runs a GF kernel
+            adv = AdversarySpec()  # arrival stream carries no payload
         elif strategy.startswith(HIER_PREFIX):
             delay = 0.0           # no arrival stream in a coding round
             straggler = "-"
             population = self.clients_per_round
+            if adv.kind != "eavesdrop":
+                # hierarchical cells model the edge-link tap; active /
+                # colluding adversaries are the flat engine's axis
+                adv = AdversarySpec()
         elif strategy in ASYNC_STRATEGIES:
             kernel = "-"          # engine kernel fixed by FedNCConfig
             dropout = 0.0         # async driver has no dropout knob yet
             delay = 0.0           # schedule_fn owns the arrival model
+            adv = AdversarySpec()  # no per-round coded batch to attack
         elif strategy == ENGINE_STRATEGY:
             delay = 0.0           # no arrival stream in a coding round
             straggler = "-"
@@ -132,13 +144,18 @@ class GridAxes:
             raise ValueError(f"unknown strategy {strategy!r}")
         name = (f"{strategy.replace(':', '')}-{straggler}"
                 f"-d{delay:g}-p{dropout:g}-n{population}-k{kernel}")
+        # suffix only under an active adversary, so adding the axis
+        # never renames (= never reseeds) any pre-existing cell
+        if not adv.none:
+            name += f"-a{adv.tag}"
         return ScenarioSpec(
             name=name, strategy=strategy, straggler=straggler,
             delay_spread=float(delay), p_dropout=float(dropout),
             population=int(population), kernel=kernel,
             clients_per_round=self.clients_per_round,
             rounds=self.rounds, s=self.s,
-            seed=scenario_seed(name, self.base_seed))
+            seed=scenario_seed(name, self.base_seed),
+            adversary=str(adv))
 
     def config(self) -> dict:
         """The grid-level record written into GRID_*.json."""
@@ -150,6 +167,7 @@ class GridAxes:
                 "p_dropout": list(self.p_dropout),
                 "population": list(self.population),
                 "kernel": list(self.kernel),
+                "adversary": list(self.adversary),
             },
             "clients_per_round": self.clients_per_round,
             "rounds": self.rounds,

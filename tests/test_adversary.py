@@ -1,0 +1,269 @@
+"""The adversary models: rank wall, collusion, byzantine detection,
+replayed seeds, and the grid's adversary axis (repro.adversary)."""
+import pathlib
+import runpy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary import (AdversarySpec, ByzantineChannel,
+                             EavesdropperView, apply_tamper,
+                             replayed_seed_batch, rounds_to_recovery,
+                             tap_edges)
+from repro.core.gf import get_field
+from repro.core.security import eavesdropper_leak_probability
+from repro.engine import CodingEngine, EngineConfig, StreamDecoder
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+S = 8
+
+
+# -- AdversarySpec: the grid axis value ----------------------------------
+
+def test_spec_parses_every_kind():
+    assert AdversarySpec.parse("none").none
+    e = AdversarySpec.parse("eavesdrop:0.6")
+    assert e.kind == "eavesdrop" and e.param == 0.6 and not e.none
+    c = AdversarySpec.parse("collude:4")
+    assert c.kind == "collude" and c.count == 4
+    b = AdversarySpec.parse("byzantine:0.05")
+    assert str(b) == "byzantine:0.05" and b.tag == "byzantine0.05"
+
+
+@pytest.mark.parametrize("bad", ["eavesdrop:1.5", "collude:0",
+                                 "collude:2.5", "byzantine:-0.1",
+                                 "tamper:0.5", "eavesdrop"])
+def test_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        AdversarySpec.parse(bad)
+
+
+# -- EavesdropperView: the rank-K wall -----------------------------------
+
+def test_view_rank_wall_and_residual_entropy():
+    K = 8
+    f = get_field(S)
+    A = f.random_elements(jax.random.PRNGKey(0), (K + 4, K))
+    view = EavesdropperView(K=K, s=S)
+    view.observe(A[:K - 1])
+    assert view.rank < K and not view.full_leak
+    assert view.sources_recovered() == 0
+    assert view.residual_entropy_bits(L=32) == (K - view.rank) * S * 32
+    view.observe(A[K - 1:])
+    assert view.full_leak and view.sources_recovered() == K
+    assert view.residual_entropy_bits() == 0.0
+
+
+def test_view_consumes_seed_headers():
+    """The 4-byte wire format hides nothing from an attacker."""
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp_packed_seeded"))
+    seeds = eng.coding_seeds(jax.random.PRNGKey(1), 10)
+    view = EavesdropperView(K=8, s=S)
+    view.observe(np.asarray(seeds))
+    assert view.full_leak
+
+
+def test_view_intercept_masks_to_fixed_shape():
+    """Captured-count statistics are unchanged by the zero-row padding
+    trick, and missed tuples really contribute nothing."""
+    K, n = 8, 12
+    f = get_field(S)
+    A = f.random_elements(jax.random.PRNGKey(2), (n, K))
+    view = EavesdropperView(K=K, s=S, seed=3, p_intercept=0.5)
+    got = view.intercept(A)
+    assert got == view.intercepted <= n
+    assert view.rank <= got
+
+
+def test_colluders_shrink_the_wall():
+    K = 8
+    view = EavesdropperView(K=K, s=S, colluders=(0, 1, 2))
+    assert view.rank == 3 and view.sources_recovered() == 3
+    # closed form: 3 insiders leave K-3 unknowns
+    with_c = eavesdropper_leak_probability(12, K - 3, 0.5, s=S)
+    without = eavesdropper_leak_probability(12, K, 0.5, s=S)
+    assert with_c > without
+    with pytest.raises(ValueError):
+        EavesdropperView(K=4, colluders=(7,))
+
+
+def test_edge_taps_structurally_capped():
+    """Full rows of e < E edges span only their own clients' columns."""
+    E, per = 3, 4
+    K = E * per
+    edges = [tuple(range(e * per, (e + 1) * per)) for e in range(E)]
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp"))
+    n_out = [per + 1] * E
+    for t in range(3):
+        A = eng.multi_edge_coding_matrix(jax.random.PRNGKey(t), edges,
+                                         K, n_out)
+        for tapped in range(E):
+            view = EavesdropperView(K=K, s=S)
+            view.observe(tap_edges(A, edges, range(tapped),
+                                   spare_per_edge=1))
+            assert view.rank <= tapped * per < K
+            assert not view.full_leak
+        view = EavesdropperView(K=K, s=S)
+        view.observe(tap_edges(A, edges, range(E), spare_per_edge=1))
+        assert view.full_leak
+
+
+def test_leak_rate_matches_closed_form():
+    """Monte-Carlo full-leak rate through the view tracks the closed
+    form (loose 5-sigma tolerance; bench_security tightens this)."""
+    K, n, p, trials = 8, 12, 0.7, 120
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp"))
+    leaks = 0
+    for t in range(trials):
+        A = eng.coding_matrix(jax.random.PRNGKey(t), n, K)
+        view = EavesdropperView(K=K, s=S, seed=t, p_intercept=p)
+        view.intercept(A)
+        if view.intercepted < K:
+            assert not view.full_leak    # the wall, per trial
+        leaks += int(view.full_leak)
+    closed = eavesdropper_leak_probability(n, K, p, s=S)
+    tol = 5 * np.sqrt(closed * (1 - closed) / trials)
+    assert abs(leaks / trials - closed) < tol
+
+
+# -- ByzantineChannel: corruption, detection, recovery -------------------
+
+def _payload(key, K=8, L=32):
+    return jax.random.randint(key, (K, L), 0, 1 << S, dtype=jnp.uint8)
+
+
+@pytest.mark.parametrize("mode", ["flip", "forge", "both"])
+def test_fused_tamper_bit_exact_vs_stagewise(mode):
+    """The fused RowTamper round must equal the stage-wise oracle for
+    every corruption mode (same RNG stream, same decode algebra)."""
+    P = _payload(jax.random.PRNGKey(0))
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp_packed",
+                                    extra_tuples=4))
+    for r in range(3):
+        rk = jax.random.fold_in(jax.random.PRNGKey(1), r)
+        fused = eng.round(P, rk, ByzantineChannel(0.3, seed=r,
+                                                  mode=mode),
+                          verify=True)
+        # the stage-wise path consumes the same planned RNG stream
+        chan = ByzantineChannel(0.3, seed=r, mode=mode)
+        A = eng.coding_matrix(rk, 12, 8)
+        batch = apply_tamper(eng.encode(P, A), chan.plan_transform(12, S),
+                             S)
+        ok, P_hat, verified = eng.decode_verified(batch)
+        assert fused.ok == ok
+        if ok:
+            assert (fused.packets == P_hat).all()
+            assert fused.verified == verified
+
+
+def test_detection_and_no_silent_corruption():
+    P = _payload(jax.random.PRNGKey(2))
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp_packed",
+                                    extra_tuples=4))
+    hostile = ByzantineChannel(rate=1.0, seed=5, mode="both")
+    out = eng.round(P, jax.random.PRNGKey(3), hostile, verify=True)
+    if out.ok:
+        assert out.verified is False
+    benign = ByzantineChannel(rate=0.0, seed=5)
+    out = eng.round(P, jax.random.PRNGKey(3), benign, verify=True)
+    assert out.ok and out.verified is True
+    assert (out.packets == P).all()
+
+
+def test_rounds_to_recovery_reaches_clean_decode():
+    P = _payload(jax.random.PRNGKey(4))
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp_packed",
+                                    extra_tuples=4))
+    rec = rounds_to_recovery(eng, P, jax.random.PRNGKey(5),
+                             ByzantineChannel(0.1, seed=6, mode="both"))
+    assert rec["accepted"] and rec["correct"]
+    assert rec["rounds"] >= 1
+    assert rec["flagged"] + rec["rank_failures"] == rec["rounds"] - 1
+
+
+def test_replayed_seeds_flagged_as_inconsistent():
+    eng = CodingEngine(EngineConfig(s=S, kernel="jnp_packed_seeded"))
+    P = _payload(jax.random.PRNGKey(6))
+    seeds = eng.coding_seeds(jax.random.PRNGKey(7), 12)
+    batch = eng.encode_seeded(P, seeds)
+    attacked = replayed_seed_batch(batch, 4, s=S, seed=8)
+    dec = StreamDecoder(K=8, L=32, s=S, detect=True)
+    dec.ingest(attacked.seeds, attacked.C)
+    assert dec.complete and dec.tampered and dec.inconsistent == 4
+    assert dec.first_inconsistent_at > 8
+    # honest stream: zero flags
+    clean = StreamDecoder(K=8, L=32, s=S, detect=True)
+    clean.ingest(batch.seeds, batch.C)
+    assert clean.complete and not clean.tampered
+
+
+# -- the grid axis -------------------------------------------------------
+
+def test_grid_axis_normalization_and_stable_names():
+    from repro.grid import GridAxes
+    axes = GridAxes(strategy=("fednc_stream", "engine", "hier:2"),
+                    straggler=("exponential",),
+                    kernel=("jnp",),
+                    adversary=("none", "eavesdrop:0.5",
+                               "byzantine:0.1"),
+                    clients_per_round=8, rounds=2, base_seed=1)
+    names = [s.name for s in axes.expand()]
+    # sim cells collapse the adversary axis entirely (no coded payload
+    # crosses a channel); no pre-existing name gains a suffix
+    assert names.count("fednc_stream-exponential-d0-p0-n10000-k-") == 1
+    assert sum("fednc_stream" in n for n in names) == 1
+    # engine cells carry every adversary; hier keeps only eavesdrop
+    assert "engine---d0-p0-n8-kjnp-aeavesdrop0.5" in names
+    assert "engine---d0-p0-n8-kjnp-abyzantine0.1" in names
+    assert "hier2---d0-p0-n8-kjnp-aeavesdrop0.5" in names
+    assert not any("hier2" in n and "byzantine" in n for n in names)
+    specs = {s.name: s for s in axes.expand()}
+    assert specs["engine---d0-p0-n8-kjnp"].adversary == "none"
+
+
+def test_grid_engine_eavesdrop_cell_metrics():
+    from repro.grid import GridAxes, run_scenario
+    axes = GridAxes(strategy=("engine",), straggler=("exponential",),
+                    kernel=("jnp",), adversary=("eavesdrop:0.6",),
+                    clients_per_round=8, rounds=2, base_seed=2)
+    spec = axes.expand()[0]
+    entry = run_scenario(spec)
+    assert entry["decode_rate"] == 1.0
+    assert 0 <= entry["eavesdrop_rank_mean"] <= 8 + 0.0
+    assert 0.0 <= entry["full_leak_rate"] <= 1.0
+    assert 0.0 <= entry["leak_probability_closed_form"] <= 1.0
+    assert entry["residual_entropy_bits_mean"] >= 0.0
+
+
+def test_grid_engine_byzantine_cell_metrics():
+    from repro.grid import GridAxes, run_scenario
+    axes = GridAxes(strategy=("engine",), straggler=("exponential",),
+                    kernel=("jnp",), adversary=("byzantine:0.2",),
+                    clients_per_round=8, rounds=2, base_seed=3)
+    entry = run_scenario(axes.expand()[0])
+    assert entry["undetected_bad_decodes"] == 0
+    assert 0.0 <= entry["detection_rate"] <= 1.0
+    assert entry["rounds_to_recovery_mean"] >= 1.0
+    assert entry["corrupted_round_rate"] >= 0.0
+
+
+@pytest.mark.slow
+def test_grid_hier_eavesdrop_cell_rank_wall():
+    from repro.grid import GridAxes, run_scenario
+    axes = GridAxes(strategy=("hier:2",), kernel=("jnp",),
+                    adversary=("eavesdrop:0.5",),
+                    clients_per_round=8, rounds=2, base_seed=4)
+    entry = run_scenario(axes.expand()[0])
+    assert entry["rank_wall_holds"] is True
+    assert entry["tapped_edges_mean"] >= 1.0
+
+
+def test_eavesdropper_rank_example_runs():
+    ns = runpy.run_path(str(ROOT / "examples" / "eavesdropper_rank.py"),
+                        run_name="not_main")
+    out = ns["main"]()
+    below = [r for r in out["edge_taps"] if r["tapped"] < ns["EDGES"]]
+    assert all(r["full_leak_rate"] == 0.0 for r in below)
+    assert out["edge_taps"][-1]["full_leak_rate"] == 1.0

@@ -37,8 +37,8 @@ def _doctored_tree(tmp_path, replace: dict) -> pathlib.Path:
         (ROOT / "scripts" / "check_bench.py").read_text())
     for fname in ("BENCH_kernels.json", "BENCH_hierarchy.json",
                   "BENCH_sim.json", "BENCH_serve.json",
-                  "GRID_grid.json", "GRID_smoke.json",
-                  "TRACE_serve.json"):
+                  "BENCH_security.json", "GRID_grid.json",
+                  "GRID_smoke.json", "TRACE_serve.json"):
         data = (json.dumps(replace[fname]) if fname in replace
                 else (ROOT / fname).read_text())
         (root / fname).write_text(data)
@@ -259,6 +259,82 @@ def test_check_bench_catches_grid_missing_per_stage(tmp_path):
                                         {"GRID_smoke.json": smoke}))
     assert proc.returncode == 1
     assert "per_stage" in proc.stderr
+
+
+def test_check_bench_catches_security_rank_wall_breach(tmp_path):
+    """The structural bar: any full leak below full edge capture, or a
+    trial leaking below K independent rows, must fail — smoke or not."""
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    sec["eavesdrop_edge_sweep"]["entries"][0]["full_leak_rate"] = 0.1
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "below full edge capture" in proc.stderr
+
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    sec["leak_probability"]["entries"][0]["rank_wall_violations"] = 2
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "below K independent rows" in proc.stderr
+
+
+def test_check_bench_catches_security_leak_drift(tmp_path):
+    """Measured leak rate drifting past its binomial tolerance from the
+    closed form must fail."""
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    entry = sec["leak_probability"]["entries"][0]
+    entry["abs_err"] = entry["tol"] * 10 + 0.1
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "from the closed form" in proc.stderr
+
+
+def test_check_bench_catches_byzantine_misses(tmp_path):
+    """A wrong decode accepted past verification always fails; a low
+    detection rate fails the full tier but is waived under
+    config.smoke (small byzantine round counts are noisy)."""
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    sec["byzantine_detection"]["entries"][0]["undetected_bad_decodes"] = 1
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "past verification" in proc.stderr
+
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    sec["byzantine_detection"]["entries"][0]["detection_rate"] = 0.5
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "detection rate" in proc.stderr
+
+    sec["config"]["smoke"] = True
+    root = _doctored_tree(tmp_path, {})
+    (root / "BENCH_security_smoke.json").write_text(json.dumps(sec))
+    proc = _run_doctored(root)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_check_bench_catches_unflagged_replays(tmp_path):
+    sec = json.loads((ROOT / "BENCH_security.json").read_text())
+    sec["replay_detection"]["flagged"] -= 1
+    proc = _run_doctored(_doctored_tree(
+        tmp_path, {"BENCH_security.json": sec}))
+    assert proc.returncode == 1
+    assert "replayed headers" in proc.stderr
+
+
+def test_check_bench_requires_smoke_grid_adversary_cells(tmp_path):
+    """GRID_smoke.json must keep >= 2 adversary cells: stripping the
+    axis back to all-none fails the checker."""
+    smoke = json.loads((ROOT / "GRID_smoke.json").read_text())
+    for entry in smoke["scenarios"].values():
+        entry["axes"]["adversary"] = "none"
+    proc = _run_doctored(_doctored_tree(tmp_path,
+                                        {"GRID_smoke.json": smoke}))
+    assert proc.returncode == 1
+    assert "adversary cells" in proc.stderr
 
 
 def test_check_bench_catches_grid_missing_seed(tmp_path):

@@ -69,3 +69,82 @@ def test_eavesdropper_leak_probability_formula():
     p = security.eavesdropper_full_leak_probability(K=10, p_intercept=0.5)
     assert p < 0.5**10 + 1e-9
     assert security.fedavg_expected_leak(10, 0.5) == 5.0
+
+
+def test_full_rank_probability_rank_wall_and_limits():
+    """The rank-K wall in closed form: zero below K tuples, product
+    form at and above, → 1 as redundancy grows."""
+    K, s = 8, 8
+    for n in range(K):
+        assert security.full_rank_probability(n, K, s) == 0.0
+    q = float(2**s)
+    # n == K: the classic prod_{i=1}^{K} (1 - q^-i)
+    exact = float(np.prod([1 - q**-(K - i) for i in range(K)]))
+    assert security.full_rank_probability(K, K, s) == pytest.approx(exact)
+    # complement of singular probability at n == K
+    assert security.full_rank_probability(K, K, s) == pytest.approx(
+        1.0 - security.singular_probability_uniform(K, s))
+    # monotone in n, approaching 1
+    vals = [security.full_rank_probability(n, K, s)
+            for n in range(K, K + 6)]
+    assert vals == sorted(vals)
+    assert vals[-1] > 1 - 1e-9
+
+
+def test_full_rank_probability_matches_monte_carlo():
+    # rank via EavesdropperView: fixed (n, K) ingest shape, so the
+    # jitted scan compiles once across all trials
+    from repro.adversary import EavesdropperView
+    from repro.core.gf import get_field
+    K, n, s, trials = 4, 5, 4, 400
+    f = get_field(s)
+    hits = 0
+    for t in range(trials):
+        view = EavesdropperView(K=K, s=s)
+        view.observe(f.random_elements(jax.random.PRNGKey(t), (n, K)))
+        hits += int(view.full_leak)
+    closed = security.full_rank_probability(n, K, s)
+    tol = 5 * np.sqrt(closed * (1 - closed) / trials)
+    assert abs(hits / trials - closed) < tol
+
+
+def test_eavesdropper_leak_probability_mixture():
+    """The binomial-mixture form: consistent with its n == K special
+    case, monotone in every argument the right way."""
+    K, s = 8, 8
+    # at n == K the mixture collapses to p^K * full_rank(K, K)
+    assert security.eavesdropper_leak_probability(
+        K, K, 0.9, s) == pytest.approx(
+        security.eavesdropper_full_leak_probability(K, 0.9, s))
+    # degenerate interception probabilities
+    assert security.eavesdropper_leak_probability(12, K, 0.0, s) == 0.0
+    assert security.eavesdropper_leak_probability(
+        12, K, 1.0, s) == pytest.approx(
+        security.full_rank_probability(12, K, s))
+    # monotone: more transmissions, higher p, fewer unknowns all help
+    for p in (0.5, 0.9):
+        vals = [security.eavesdropper_leak_probability(n, K, p, s)
+                for n in range(K, K + 8)]
+        assert vals == sorted(vals)
+    vals = [security.eavesdropper_leak_probability(12, K, p, s)
+            for p in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert vals == sorted(vals)
+    # collusion: c insiders leave K - c unknowns -> strictly easier
+    assert (security.eavesdropper_leak_probability(12, K - 3, 0.5, s)
+            > security.eavesdropper_leak_probability(12, K, 0.5, s))
+
+
+@pytest.mark.slow
+def test_eavesdropper_leak_probability_matches_monte_carlo():
+    from repro.adversary import EavesdropperView
+    from repro.core.gf import get_field
+    K, n, p, s, trials = 4, 6, 0.7, 4, 500
+    f = get_field(s)
+    hits = 0
+    for t in range(trials):
+        view = EavesdropperView(K=K, s=s, seed=t, p_intercept=p)
+        view.intercept(f.random_elements(jax.random.PRNGKey(t), (n, K)))
+        hits += int(view.full_leak)
+    closed = security.eavesdropper_leak_probability(n, K, p, s)
+    tol = 5 * np.sqrt(closed * (1 - closed) / trials)
+    assert abs(hits / trials - closed) < tol
